@@ -1,0 +1,12 @@
+"""Benchmark harnesses — one per paper table/figure.
+
+    table1_sgemm     Table 1 / Fig 7: SGEMM R-scaling, 4 strategies
+    fig2_batch_sweep Fig 2: batch size vs throughput under an SLO
+    fig3_latency     Fig 3: per-tenant latency vs tenant count (model level)
+    fig4_predictability  Fig 4: inter-tenant latency spread
+    fig5_replicas    Fig 5: replica memory scaling (stacked vs per-process)
+    dynamic_trace    §4: stochastic arrivals — cache warmup + latency anneal
+    roofline_report  §Roofline: the (arch x shape x mesh) table from dry-runs
+
+Run everything: ``PYTHONPATH=src python -m benchmarks.run``
+"""

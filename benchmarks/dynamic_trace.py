@@ -1,0 +1,74 @@
+"""Section 4 claim: "overheads gradually decrease if we cache super-kernels
+as workloads stabilize over time."
+
+Stochastic (Poisson) kernel arrivals from R tenants drive the dynamic
+scheduler; we report per-quarter mean latency, dispatch count and cache
+hit-rate. Expected: hit-rate -> ~1 and latency anneals after the first
+quarter (compiles amortized), demonstrating the super-kernel cache doing
+its job under non-stationary R.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ScheduleConfig
+from repro.core import DynamicSpaceTimeScheduler, GemmProblem
+from repro.configs.paper_sgemm import PAPER_GEMM_SHAPES
+
+
+def run(num_events: int = 200, tenants: int = 12, seed: int = 0, csv_rows=None):
+    print("\n=== Dynamic trace: cache warm-up under stochastic arrivals ===")
+    g = PAPER_GEMM_SHAPES["resnet18_conv2_2"]
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+
+    # device-resident per-tenant weights; fresh activations per query
+    ws = [jax.random.normal(jax.random.fold_in(key, t), (g.K, g.N), jnp.float32)
+          for t in range(tenants)]
+    xs = [jax.random.normal(jax.random.fold_in(key, 1000 + i), (g.M, g.K), jnp.float32)
+          for i in range(8)]
+
+    sched = DynamicSpaceTimeScheduler(
+        ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32)
+    )
+    lat: List[float] = []
+    hit_marks: List[float] = []
+    t_clock = time.perf_counter()
+    for i in range(num_events):
+        # Poisson batch of arrivals (bursty, like online traffic)
+        for _ in range(1 + rng.poisson(2.0)):
+            t = int(rng.integers(tenants))
+            sched.submit(GemmProblem(tenant_id=t, x=xs[int(rng.integers(len(xs)))], w=ws[t]))
+        done = sched.pump()
+        for p in done:
+            lat.append(p.completion_time - p.arrival_time)
+            hit_marks.append(sched.cache.stats.hit_rate)
+        time.sleep(0.0002)
+    for p in sched.flush():
+        lat.append(p.completion_time - p.arrival_time)
+        hit_marks.append(sched.cache.stats.hit_rate)
+
+    q = max(1, len(lat) // 4)
+    print(f"{'quarter':>8s} {'mean lat ms':>12s} {'hit rate':>9s}")
+    for qi in range(4):
+        seg = lat[qi * q:(qi + 1) * q]
+        hseg = hit_marks[qi * q:(qi + 1) * q]
+        if not seg:
+            continue
+        print(f"{qi+1:8d} {np.mean(seg)*1e3:12.3f} {hseg[-1]:9.2f}")
+        if csv_rows is not None:
+            csv_rows.append((f"dynamic_trace/q{qi+1}", float(np.mean(seg) * 1e6),
+                             f"hit_rate={hseg[-1]:.2f}"))
+    rep = sched.report()
+    print(f"final: dispatches={rep['dispatches']:.0f} problems={rep['problems']:.0f} "
+          f"hit_rate={rep['cache_hit_rate']:.2f} spread={rep.get('spread', 0):.2%}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Figure 2: batch size vs throughput and latency under an SLO.
+
+Paper: ResNet-50 on V100 — throughput grows with batch, but the largest
+batch within a 30 ms SLO only reaches ~28% of peak. Here: prefill of a
+smoke model across batch sizes; reports tokens/s, latency, and the largest
+batch meeting the SLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_config, smoke_variant
+from repro.models import build_model
+
+SLO_S = 0.200
+
+
+def run(batches=(1, 2, 4, 8, 16, 32), seq: int = 32, csv_rows=None):
+    print("\n=== Fig 2: batch vs throughput under SLO "
+          f"({int(SLO_S*1e3)} ms, smoke model) ===")
+    cfg = dataclasses.replace(smoke_variant(get_config("stablelm-1.6b")), dtype="float32")
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    fn = jax.jit(lambda p, t: m.forward_prefill(p, t, cache_len=seq)[0])
+    print(f"{'batch':>6s} {'latency ms':>11s} {'tokens/s':>10s} {'in SLO':>7s}")
+    best_in_slo = 0
+    rates = []
+    for b in batches:
+        toks = jax.random.randint(key, (b, seq), 0, cfg.vocab_size)
+        jax.block_until_ready(fn(params, toks))
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(fn(params, toks))
+        dt = (time.perf_counter() - t0) / 3
+        rate = b * seq / dt
+        rates.append(rate)
+        ok = dt <= SLO_S
+        if ok:
+            best_in_slo = b
+        print(f"{b:6d} {dt*1e3:11.2f} {rate:10.0f} {'yes' if ok else 'NO':>7s}")
+        if csv_rows is not None:
+            csv_rows.append((f"fig2/batch{b}", dt * 1e6, f"tokens_per_s={rate:.0f}"))
+    util = rates[[i for i, b in enumerate(batches) if b == best_in_slo][0]] / rates[-1] \
+        if best_in_slo else 0.0
+    print(f"largest batch in SLO: {best_in_slo}; utilization at that point vs "
+          f"max-batch throughput: {util:.0%} (paper: 28% of peak)")
+
+
+if __name__ == "__main__":
+    run()

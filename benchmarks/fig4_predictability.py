@@ -1,0 +1,58 @@
+"""Figure 4: inter-tenant latency predictability.
+
+Paper: under MPS space-only sharing, co-located tenants diverge by up to
+25% (worse with odd tenant counts) — unpredictability caused by the device
+scheduler. Claim for space-time: a merged super-kernel gives every tenant
+the SAME step latency by construction; the residual spread comes only from
+the queueing layer.
+
+Measured here: per-tenant mean step latency spread under (a) the engine's
+time_only mode (each tenant dispatched separately — spread reflects
+dispatch jitter and model-order position) vs (b) space_time mode (one
+merged program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.config import get_config, smoke_variant
+from repro.models import build_model
+from repro.serving import EngineConfig, InferenceRequest, MultiTenantEngine
+
+
+def run(r: int = 5, steps: int = 16, csv_rows=None):
+    # odd tenant count on purpose — the paper's worst case for MPS
+    print(f"\n=== Fig 4: inter-tenant latency spread (R={r}, odd) ===")
+    cfg = dataclasses.replace(smoke_variant(get_config("stablelm-1.6b")), dtype="float32")
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    rng = np.random.RandomState(0)
+    params = [m.init(jax.random.fold_in(key, t)) for t in range(r)]
+
+    for mode in ("time_only", "space_time"):
+        eng = MultiTenantEngine(
+            m, params,
+            EngineConfig(num_tenants=r, slots_per_tenant=1, cache_len=64, mode=mode),
+        )
+        # per-tenant wall-clock accounting for time_only needs separate timing;
+        # reuse the engine's monitor which records per-step latency per tenant.
+        for t in range(r):
+            eng.submit(InferenceRequest(
+                tenant_id=t, prompt=list(rng.randint(1, cfg.vocab_size, 8)),
+                max_new_tokens=steps))
+        eng.run_until_drained()
+        spread = eng.monitor.predictability_spread()
+        rep = eng.report()
+        print(f"{mode:11s}: spread={spread:7.2%}  p95/p50="
+              f"{rep['p95_s']/max(rep['p50_s'],1e-12):5.2f}")
+        if csv_rows is not None:
+            csv_rows.append((f"fig4/{mode}/spread", spread * 100, "pct (paper MPS: 25%)"))
+
+
+if __name__ == "__main__":
+    run()

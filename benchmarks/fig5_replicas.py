@@ -1,0 +1,62 @@
+"""Figure 5: how many model replicas fit — stacked-weight tenancy vs
+per-process replication.
+
+Paper: MPS/time-sharing hit the 16 GB V100 wall at ~18 ResNet-50 replicas
+(per-process CUDA context ~= 300 MB each); explicit streams scaled past 60.
+Here: measured stacked-pytree bytes per tenant (repro.core.tenancy) vs a
+per-process model charging each replica the measured weight bytes + a
+300 MB context. Derived column: max replicas under 16 GB (v5e HBM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.config import get_config, smoke_variant
+from repro.core.tenancy import TenantManager, tenant_bytes
+from repro.models import build_model
+
+HBM = 16 * 2**30
+CONTEXT_BYTES = 300 * 2**20  # per-process framework/context overhead
+
+
+def run(csv_rows=None):
+    print("\n=== Fig 5: replica scaling — stacked tenancy vs per-process ===")
+    key = jax.random.PRNGKey(0)
+
+    # measured: stack real smoke-model weights and verify linear growth
+    cfg = dataclasses.replace(smoke_variant(get_config("stablelm-1.6b")), dtype="float32")
+    m = build_model(cfg)
+    tm = TenantManager()
+    per = None
+    for t in range(8):
+        tm.register(t, m.init(jax.random.fold_in(key, t)))
+    stacked = tm.stacked()
+    per = tenant_bytes(jax.tree.map(lambda x: x[0], stacked))
+    total = tenant_bytes(stacked)
+    overhead = total - 8 * per
+    print(f"measured (stablelm smoke): 8 tenants, {per/2**20:.1f} MiB each, "
+          f"stack overhead {overhead} bytes (exactly 0 = no duplication)")
+    if csv_rows is not None:
+        csv_rows.append(("fig5/stacked_overhead_bytes", float(overhead), "0=ideal"))
+
+    print(f"\n{'arch':28s} {'W (GiB, bf16)':>14s} {'max R stacked':>14s} "
+          f"{'max R per-proc':>15s}")
+    for arch in ("stablelm-1.6b", "rwkv6-1.6b", "granite-moe-1b-a400m",
+                 "paligemma-3b", "qwen2-7b", "granite-3-8b"):
+        cfg = get_config(arch)
+        w = cfg.param_count() * 2  # bf16 serving weights
+        r_stack = HBM // w
+        r_proc = HBM // (w + CONTEXT_BYTES)
+        print(f"{arch:28s} {w/2**30:14.2f} {r_stack:14d} {r_proc:15d}")
+        if csv_rows is not None:
+            csv_rows.append((f"fig5/{arch}/max_replicas_stacked", float(r_stack),
+                             f"per_proc={r_proc}"))
+    print("(single-chip 16 GB; on the pod mesh the tenant axis shards over "
+          "`data`, multiplying capacity by 16)")
+
+
+if __name__ == "__main__":
+    run()

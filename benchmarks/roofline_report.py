@@ -1,0 +1,70 @@
+"""§Roofline: render the (arch x shape x mesh) table from dry-run records.
+
+Reads experiments/dryrun/*.json written by repro.launch.dryrun and prints
+the three roofline terms, dominant bottleneck and useful-FLOPs ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def variant(rec: Dict) -> str:
+    parts = []
+    if rec.get("policy", "fsdp") != "fsdp":
+        parts.append(rec["policy"])
+    if rec.get("tenants", 1) > 1:
+        parts.append(f"R{rec['tenants']}")
+    if rec.get("microbatch", 1) > 1:
+        parts.append(f"mb{rec['microbatch']}")
+    return "+".join(parts) or "base"
+
+
+def load(records_dir: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for path in glob.glob(os.path.join(records_dir, "*.json")):
+        with open(path) as f:
+            recs.append(json.load(f))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9), r["mesh"],
+                             variant(r)))
+    return recs
+
+
+def run(records_dir: str = "experiments/dryrun", mesh: str = "pod1", csv_rows=None):
+    recs = [r for r in load(records_dir) if r.get("mesh") == mesh]
+    if not recs:
+        print(f"(no dry-run records under {records_dir} for mesh={mesh} — run "
+              f"`python -m repro.launch.dryrun --all --mesh {mesh} --out {records_dir}`)")
+        return
+    print(f"\n=== Roofline table (mesh={mesh}) ===")
+    print(f"{'arch':26s} {'shape':12s} {'variant':>9s} {'t_comp':>9s} {'t_mem':>9s} "
+          f"{'t_coll':>9s} {'bound':>10s} {'useful':>7s} {'HBM GiB/dev':>12s}")
+    for r in recs:
+        v = variant(r)
+        if r["status"] == "skipped":
+            print(f"{r['arch']:26s} {r['shape']:12s} {v:>9s} {'—':>9s} {'—':>9s} {'—':>9s} "
+                  f"{'skip':>10s}   ({r['reason'][:40]})")
+            continue
+        if r["status"] != "ok":
+            print(f"{r['arch']:26s} {r['shape']:12s} {v:>9s} ERROR: {r.get('error','?')[:60]}")
+            continue
+        mem = r.get("memory_analysis", {}).get("approx_total_per_device_gib", 0.0)
+        print(f"{r['arch']:26s} {r['shape']:12s} {v:>9s} {r['t_compute_s']:9.2e} "
+              f"{r['t_memory_s']:9.2e} {r['t_collective_s']:9.2e} "
+              f"{r['bottleneck']:>10s} {r['useful_flops_ratio']:7.3f} {mem:12.2f}")
+        if csv_rows is not None:
+            csv_rows.append((
+                f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+                max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6,
+                f"bound={r['bottleneck']},useful={r['useful_flops_ratio']:.3f}",
+            ))
+
+
+if __name__ == "__main__":
+    run()
+    run(mesh="pod2")

@@ -1,0 +1,64 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints human-readable sections followed by a machine-readable CSV block
+(``name,us_per_call,derived``). Usage:
+
+    PYTHONPATH=src python -m benchmarks.run           # everything
+    PYTHONPATH=src python -m benchmarks.run --quick   # reduced sweeps
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sweeps")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table1,fig2,fig3,fig4,fig5,trace,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    csv_rows = []
+    t0 = time.time()
+
+    from benchmarks import (
+        dynamic_trace,
+        fig2_batch_sweep,
+        fig3_latency,
+        fig4_predictability,
+        fig5_replicas,
+        roofline_report,
+        table1_sgemm,
+    )
+
+    if want("table1"):
+        r_sweep = (2, 8, 32) if args.quick else (2, 4, 8, 16, 32)
+        table1_sgemm.run(r_sweep=r_sweep, reps=3 if args.quick else 5, csv_rows=csv_rows)
+    if want("fig2"):
+        fig2_batch_sweep.run(csv_rows=csv_rows)
+    if want("fig3"):
+        fig3_latency.run(csv_rows=csv_rows)
+    if want("fig4"):
+        fig4_predictability.run(csv_rows=csv_rows)
+    if want("fig5"):
+        fig5_replicas.run(csv_rows=csv_rows)
+    if want("trace"):
+        dynamic_trace.run(num_events=80 if args.quick else 200, csv_rows=csv_rows)
+    if want("roofline"):
+        roofline_report.run(csv_rows=csv_rows)
+        roofline_report.run(mesh="pod2", csv_rows=csv_rows)
+
+    print(f"\n=== CSV (name,us_per_call,derived) — total {time.time()-t0:.0f}s ===")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

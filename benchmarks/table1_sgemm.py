@@ -1,0 +1,140 @@
+"""Table 1 / Figure 7: inter-model SGEMM batching throughput vs R.
+
+Two complementary readouts (DESIGN.md section 7):
+  * MEASURED (this CPU): wall-clock GFLOP/s for the four strategies.
+    A single CPU core cannot show spatial underutilization, so the
+    measurable ordinal claim here is time_only < {space_only, space_time}.
+  * DERIVED (TPU v5e MXU model): first-order per-strategy kernel-time
+    model — per-kernel dispatch + systolic pipeline fill + MXU busy
+    cycles — which is where the paper's >3x space-time gain lives.
+
+Derived-model assumptions (documented, first-order):
+    MXU 128x128 @ 940 MHz; one K-panel pass = 128 cycles;
+    busy(M,N,K) = ceil(M/128)*ceil(N/128)*ceil(K/128)*128 cycles;
+    pipeline fill = 128 cycles per kernel launch; dispatch = 2 us/kernel;
+    context switch (time-only) = 5 us; HBM roof = 819 GB/s.
+"""
+
+from __future__ import annotations
+
+import math
+import statistics
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ScheduleConfig
+from repro.configs.paper_sgemm import PAPER_GEMM_SHAPES, GemmShape
+from repro.core.queue import GemmProblem
+from repro.core.strategies import Exclusive, SpaceOnly, SpaceTime, TimeOnly
+from repro.core.superkernel import SuperKernelCache
+
+MXU_FREQ = 940e6
+MXU_TILE = 128
+PIPE_FILL_CYCLES = 128
+DISPATCH_S = 2e-6
+CTX_SWITCH_S = 5e-6
+HBM_BW = 819e9
+
+
+def mxu_busy_cycles(g: GemmShape) -> float:
+    tiles = (
+        math.ceil(g.M / MXU_TILE) * math.ceil(g.N / MXU_TILE) * math.ceil(g.K / MXU_TILE)
+    )
+    return tiles * MXU_TILE
+
+
+def derived_tpu_time(g: GemmShape, r: int, strategy: str) -> float:
+    busy = mxu_busy_cycles(g) / MXU_FREQ
+    fill = PIPE_FILL_CYCLES / MXU_FREQ
+    mem = r * 4 * (g.M * g.K + g.K * g.N + g.M * g.N) / HBM_BW
+    if strategy == "time_only":
+        t = r * (CTX_SWITCH_S + DISPATCH_S + busy + fill)
+    elif strategy == "space_only":
+        t = DISPATCH_S + r * (busy + fill)
+    elif strategy in ("space_time", "exclusive"):
+        t = DISPATCH_S + r * busy + fill
+    else:
+        raise ValueError(strategy)
+    return max(t, mem)
+
+
+def make_problems(g: GemmShape, r: int, seed: int = 0) -> List[GemmProblem]:
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for t in range(r):
+        kx, kw, key = jax.random.split(key, 3)
+        out.append(
+            GemmProblem(
+                tenant_id=t,
+                x=jax.random.normal(kx, (g.M, g.K), jnp.float32),
+                w=jax.random.normal(kw, (g.K, g.N), jnp.float32),
+            )
+        )
+    return out
+
+
+def measure(g: GemmShape, r: int, reps: int = 5) -> Dict[str, float]:
+    problems = make_problems(g, r)
+    out: Dict[str, float] = {}
+    strategies = [
+        TimeOnly(),
+        SpaceOnly(),
+        SpaceTime(SuperKernelCache(ScheduleConfig(r_bucketing="exact"))),
+        Exclusive(),
+    ]
+    for s in strategies:
+        s.prepare(problems)
+        times = []
+        for _ in range(reps):
+            _, t = s.run()
+            times.append(t)
+        out[s.name] = g.flops * r / min(times)  # FLOP/s
+    return out
+
+
+def geomean(xs: List[float]) -> float:
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def run(r_sweep=(2, 4, 8, 16, 32), reps: int = 5, csv_rows=None):
+    print("\n=== Table 1 / Fig 7: SGEMM R-scaling (measured CPU + derived TPU) ===")
+    header = (
+        f"{'shape':18s} {'R':>4s} | measured GFLOP/s: "
+        f"{'time':>8s} {'space':>8s} {'st':>8s} {'excl':>8s} | "
+        f"derived TPU speedup st/space st/time"
+    )
+    print(header)
+    paper = {"rnn_matvec": 2.48, "resnet18_conv2_2": 3.23, "square_256": 4.93}
+    for name, g in PAPER_GEMM_SHAPES.items():
+        st_vs_space, st_vs_time = [], []
+        for r in r_sweep:
+            m = measure(g, r, reps)
+            d = {s: derived_tpu_time(g, r, s) for s in
+                 ("time_only", "space_only", "space_time")}
+            sp_space = d["space_only"] / d["space_time"]
+            sp_time = d["time_only"] / d["space_time"]
+            st_vs_space.append(sp_space)
+            st_vs_time.append(sp_time)
+            print(
+                f"{name:18s} {r:4d} | "
+                f"{m['time_only']/1e9:8.1f} {m['space_only']/1e9:8.1f} "
+                f"{m['space_time']/1e9:8.1f} {m['exclusive']/1e9:8.1f} | "
+                f"{sp_space:7.2f}x {sp_time:6.2f}x"
+            )
+            if csv_rows is not None:
+                for strat, flops in m.items():
+                    csv_rows.append(
+                        (f"table1/{name}/R{r}/{strat}", 1e6 * g.flops * r / flops,
+                         f"{flops/1e9:.2f}GFLOPs_measured")
+                    )
+        print(
+            f"{name:18s} geomean derived: st/space {geomean(st_vs_space):.2f}x "
+            f"st/time {geomean(st_vs_time):.2f}x  (paper geomean vs next-best: "
+            f"{paper[name]:.2f}x)"
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Ablation of the dynamic scheduler's knobs (paper section 4).
+
+Sweeps the batching window and R-bucketing policy over a stochastic trace
+and reports the latency/throughput/compile trade-off each knob controls:
+
+  * window=0           -> per-arrival dispatch (degenerates toward
+                          space-only: many small super-kernels)
+  * window=inf(ish)    -> offline batching (max merge, worst latency)
+  * r_bucketing=exact  -> one compile per distinct R (cold-start heavy)
+  * r_bucketing=pow2   -> padded merge, log2 many compiles
+
+    PYTHONPATH=src python examples/spacetime_ablation.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ScheduleConfig
+from repro.configs.paper_sgemm import PAPER_GEMM_SHAPES
+from repro.core import DynamicSpaceTimeScheduler, GemmProblem
+
+
+def trace(sched: DynamicSpaceTimeScheduler, tenants=8, events=120, seed=0):
+    g = PAPER_GEMM_SHAPES["resnet18_conv2_2"]
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    ws = [jax.random.normal(jax.random.fold_in(key, t), (g.K, g.N), jnp.float32)
+          for t in range(tenants)]
+    xs = [jax.random.normal(jax.random.fold_in(key, 99 + i), (g.M, g.K), jnp.float32)
+          for i in range(4)]
+    lat = []
+    for _ in range(events):
+        for _ in range(1 + rng.poisson(1.5)):
+            t = int(rng.integers(tenants))
+            sched.submit(GemmProblem(tenant_id=t, x=xs[int(rng.integers(4))], w=ws[t]))
+        for p in sched.pump():
+            lat.append(p.completion_time - p.arrival_time)
+        time.sleep(0.0002)
+    for p in sched.flush():
+        lat.append(p.completion_time - p.arrival_time)
+    return np.asarray(lat)
+
+
+def main() -> None:
+    print(f"{'window_ms':>10s} {'bucketing':>10s} {'p50 ms':>8s} {'p95 ms':>8s} "
+          f"{'dispatches':>11s} {'hit rate':>9s}")
+    for window_s in (0.0, 0.002, 0.02):
+        for bucketing in ("pow2", "exact"):
+            sched = DynamicSpaceTimeScheduler(ScheduleConfig(
+                batching_window_s=window_s, r_bucketing=bucketing,
+                max_superkernel_size=64))
+            lat = trace(sched)
+            rep = sched.report()
+            print(f"{window_s*1e3:10.1f} {bucketing:>10s} "
+                  f"{np.percentile(lat,50)*1e3:8.2f} {np.percentile(lat,95)*1e3:8.2f} "
+                  f"{rep['dispatches']:11.0f} {rep['cache_hit_rate']:9.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Render the §Roofline markdown table from dry-run records.
+
+    PYTHONPATH=src python experiments/render_roofline.py [records_dir]
+"""
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+from benchmarks.roofline_report import load, variant  # noqa: E402
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def main(records_dir: str = "experiments/dryrun") -> None:
+    recs = load(records_dir)
+    for mesh in ("pod1", "pod2"):
+        rows = [r for r in recs if r.get("mesh") == mesh]
+        if not rows:
+            continue
+        print(f"\n### Roofline — mesh {mesh} "
+              f"({'256 chips' if mesh == 'pod1' else '512 chips, 2 pods'})\n")
+        print("| arch | shape | variant | t_compute | t_memory | t_collective | bound "
+              "| useful FLOPs | GiB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            v = variant(r)
+            if r["status"] == "skipped":
+                print(f"| {r['arch']} | {r['shape']} | {v} | — | — | — | skip | — | — |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {r['arch']} | {r['shape']} | {v} | ERROR {r.get('error','')[:40]} |")
+                continue
+            mem = r.get("memory_analysis", {}).get("approx_total_per_device_gib", 0.0)
+            print(f"| {r['arch']} | {r['shape']} | {v} | {r['t_compute_s']:.2e} s "
+                  f"| {r['t_memory_s']:.2e} s | {r['t_collective_s']:.2e} s "
+                  f"| {r['bottleneck']} | {r['useful_flops_ratio']:.3f} | {mem:.1f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

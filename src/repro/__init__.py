@@ -1,0 +1,18 @@
+"""repro: Dynamic Space-Time Scheduling for accelerator inference, in JAX.
+
+Reproduction + TPU-native extension of Jain et al., "Dynamic Space-Time
+Scheduling for GPU Inference" (CS.DC 2018 / NeurIPS ML-for-Systems workshop).
+
+Public API surface:
+    repro.config      -- configuration dataclasses and registry
+    repro.configs     -- assigned architecture configs
+    repro.models      -- pure-JAX model substrate
+    repro.kernels     -- Pallas TPU super-kernels (+ jnp reference oracles)
+    repro.core        -- the paper's contribution: the space-time scheduler
+    repro.serving     -- multi-tenant inference engine
+    repro.training    -- optimizer / data / checkpoint / train loop
+    repro.distributed -- sharding rules and mesh helpers
+    repro.launch      -- mesh construction, dry-run, roofline, drivers
+"""
+
+__version__ = "1.0.0"

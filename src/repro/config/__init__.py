@@ -1,0 +1,37 @@
+"""Configuration system: typed dataclasses + registry + CLI overrides."""
+
+from repro.config.model import (
+    AttentionKind,
+    BlockKind,
+    Modality,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+)
+from repro.config.registry import (
+    get_config,
+    list_configs,
+    register_config,
+    smoke_variant,
+)
+from repro.config.shapes import INPUT_SHAPES, InputShape, get_shape
+from repro.config.runtime import MeshConfig, RuntimeConfig, ScheduleConfig
+
+__all__ = [
+    "AttentionKind",
+    "BlockKind",
+    "Modality",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "MeshConfig",
+    "RuntimeConfig",
+    "ScheduleConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "get_shape",
+    "get_config",
+    "list_configs",
+    "register_config",
+    "smoke_variant",
+]

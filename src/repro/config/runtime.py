@@ -1,0 +1,82 @@
+"""Runtime / mesh / scheduler configuration dataclasses."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Production mesh description (pod, data, model)."""
+
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axis_names
+
+    @staticmethod
+    def single_pod() -> "MeshConfig":
+        return MeshConfig((16, 16), ("data", "model"))
+
+    @staticmethod
+    def two_pod() -> "MeshConfig":
+        return MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+    @staticmethod
+    def host_debug() -> "MeshConfig":
+        return MeshConfig((1, 1), ("data", "model"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    """Dynamic space-time scheduler knobs (paper section 4)."""
+
+    # batching window: how long the scheduler waits to accumulate matching
+    # kernels before dispatching a super-kernel (seconds, host clock).
+    batching_window_s: float = 0.002
+    # maximum problems merged into one super-kernel invocation.
+    max_superkernel_size: int = 128
+    # R is padded up to the next bucket to bound the number of compiled
+    # super-kernel variants (paper: "cache super-kernels as workloads
+    # stabilize"). Power-of-two bucketing.
+    r_bucketing: str = "pow2"  # "pow2" | "exact"
+    # straggler eviction: tenants whose EWMA latency exceeds this multiple of
+    # the cohort median get evicted to a fresh queue slot.
+    straggler_eviction_ratio: float = 1.5
+    latency_ewma_alpha: float = 0.2
+    # SLO default (seconds) used when requests don't carry one.
+    default_slo_s: float = 0.100
+    # when True the scheduler may merge GEMMs of *different* shapes through
+    # the grouped (ragged) kernel — beyond-paper extension (MAGMA vbatched
+    # analogue).
+    allow_ragged_merge: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Top-level runtime bundle consumed by launchers."""
+
+    arch: str = "granite-3-8b"
+    shape: str = "train_4k"
+    mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig.single_pod)
+    schedule: ScheduleConfig = dataclasses.field(default_factory=ScheduleConfig)
+    num_tenants: int = 1
+    seed: int = 0
+    # training knobs
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 300
+    # remat policy: "none" | "block" | "full"
+    remat: str = "block"
+    checkpoint_dir: Optional[str] = None

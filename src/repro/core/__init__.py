@@ -1,0 +1,17 @@
+"""The paper's primary contribution: dynamic space-time kernel scheduling.
+
+Components (paper section 4):
+    queue        -- shape-bucketed kernel arrival queue
+    superkernel  -- inter-model batched super-kernel builder + compile cache
+    strategies   -- the four multiplexing strategies under comparison
+                    (exclusive / time-only / space-only / space-time)
+    scheduler    -- DynamicSpaceTimeScheduler: batching window, SLO-aware
+                    dispatch, straggler eviction
+    tenancy      -- multi-tenant model/weight store (stacked pytrees)
+    slo          -- per-tenant latency EWMA + predictability metrics
+"""
+
+from repro.core.queue import GemmProblem, KernelQueue, ShapeBucket  # noqa: F401
+from repro.core.scheduler import DynamicSpaceTimeScheduler  # noqa: F401
+from repro.core.superkernel import SuperKernelCache  # noqa: F401
+from repro.core.tenancy import TenantManager, stack_params, unstack_params  # noqa: F401

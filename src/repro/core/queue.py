@@ -1,0 +1,98 @@
+"""Shape-bucketed kernel arrival queue.
+
+Interactive inference queries arrive stochastically; each query decomposes
+into a stream of kernel launches (mostly GEMMs). The queue groups pending
+kernels by *shape bucket* — problems in the same bucket are mergeable into
+one super-kernel. This mirrors the paper's dynamic scheduler front-end.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeBucket:
+    """Super-kernel mergeability key."""
+
+    op: str                       # "gemm" (others pluggable)
+    M: int
+    K: int
+    N: int
+    dtype: str
+
+    @staticmethod
+    def for_gemm(x: jax.Array, w: jax.Array) -> "ShapeBucket":
+        M, K = x.shape
+        _, N = w.shape
+        return ShapeBucket("gemm", M, K, N, str(x.dtype))
+
+
+_seq = itertools.count()
+
+
+@dataclasses.dataclass
+class GemmProblem:
+    """One pending kernel from one tenant's model."""
+
+    tenant_id: int
+    x: jax.Array                  # (M, K) activation
+    w: jax.Array                  # (K, N) this tenant's weights
+    arrival_time: float = 0.0
+    slo_s: float = 0.100
+    seq: int = dataclasses.field(default_factory=lambda: next(_seq))
+    # filled by the scheduler on completion:
+    result: Optional[jax.Array] = None
+    completion_time: Optional[float] = None
+
+    @property
+    def bucket(self) -> ShapeBucket:
+        return ShapeBucket.for_gemm(self.x, self.w)
+
+    @property
+    def flops(self) -> int:
+        M, K = self.x.shape
+        N = self.w.shape[1]
+        return 2 * M * K * N
+
+
+class KernelQueue:
+    """FIFO-per-bucket pending-kernel store."""
+
+    def __init__(self) -> None:
+        self._buckets: Dict[ShapeBucket, Deque[GemmProblem]] = collections.defaultdict(
+            collections.deque
+        )
+
+    def push(self, problem: GemmProblem) -> None:
+        self._buckets[problem.bucket].append(problem)
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._buckets.values())
+
+    def buckets(self) -> List[Tuple[ShapeBucket, int]]:
+        return [(b, len(q)) for b, q in self._buckets.items() if q]
+
+    def oldest_arrival(self, bucket: ShapeBucket) -> Optional[float]:
+        q = self._buckets.get(bucket)
+        return q[0].arrival_time if q else None
+
+    def pop_batch(self, bucket: ShapeBucket, max_n: int) -> List[GemmProblem]:
+        """Pop up to max_n problems from a bucket, FIFO order."""
+        q = self._buckets[bucket]
+        out = []
+        while q and len(out) < max_n:
+            out.append(q.popleft())
+        return out
+
+    def drain(self) -> List[GemmProblem]:
+        out = []
+        for q in self._buckets.values():
+            out.extend(q)
+            q.clear()
+        return out

@@ -1,0 +1,167 @@
+"""DynamicSpaceTimeScheduler — the paper's proposed scheduler (section 4).
+
+Queries arrive stochastically, so super-kernels cannot be precomputed
+ahead-of-time. The scheduler:
+
+  1. enqueues arriving kernels into shape buckets (``KernelQueue``);
+  2. waits up to ``batching_window_s`` for more mergeable arrivals (the
+     space-time trade-off knob: window=0 degrades toward per-kernel
+     dispatch, window=inf degrades toward offline batching);
+  3. dispatches each ripe bucket as ONE super-kernel through the compile
+     cache (``SuperKernelCache``), bounded by ``max_superkernel_size``;
+  4. records per-tenant latency, detects stragglers, and evicts them
+     (``LatencyMonitor`` + caller-provided eviction hook).
+
+The pump is synchronous and host-driven — the paper's scheduler is also a
+software scheduler above the accelerator; determinism here is what makes
+the property-based tests (batched == sequential) possible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.config import ScheduleConfig
+from repro.core.queue import GemmProblem, KernelQueue, ShapeBucket
+from repro.core.slo import LatencyMonitor
+from repro.core.superkernel import SuperKernelCache
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    dispatches: int = 0
+    problems_completed: int = 0
+    total_flops: int = 0
+    busy_time_s: float = 0.0
+
+    @property
+    def achieved_tflops(self) -> float:
+        if self.busy_time_s == 0.0:
+            return 0.0
+        return self.total_flops / self.busy_time_s / 1e12
+
+
+class DynamicSpaceTimeScheduler:
+    def __init__(
+        self,
+        schedule: Optional[ScheduleConfig] = None,
+        on_evict: Optional[Callable[[int], None]] = None,
+    ):
+        self.schedule = schedule or ScheduleConfig()
+        self.queue = KernelQueue()
+        self.cache = SuperKernelCache(self.schedule)
+        self.monitor = LatencyMonitor(
+            self.schedule.latency_ewma_alpha,
+            self.schedule.straggler_eviction_ratio,
+        )
+        self.stats = SchedulerStats()
+        self.on_evict = on_evict
+        self.evicted: List[int] = []
+
+    # ---------------------------------------------------------------- intake
+    def submit(self, problem: GemmProblem, now: Optional[float] = None) -> None:
+        problem.arrival_time = now if now is not None else time.perf_counter()
+        self.queue.push(problem)
+
+    # ---------------------------------------------------------------- dispatch
+    def _ripe(self, bucket: ShapeBucket, count: int, now: float) -> bool:
+        if count >= self.schedule.max_superkernel_size:
+            return True
+        oldest = self.queue.oldest_arrival(bucket)
+        return oldest is not None and (now - oldest) >= self.schedule.batching_window_s
+
+    def pump(self, now: Optional[float] = None, force: bool = False) -> List[GemmProblem]:
+        """Dispatch every ripe bucket; returns completed problems.
+
+        With ``allow_ragged_merge`` (beyond-paper, MAGMA-vbatched analogue),
+        ripe buckets sharing (op, K, N, dtype) but differing in M are merged
+        into ONE grouped super-kernel instead of one uniform super-kernel
+        per exact shape.
+        """
+        now = now if now is not None else time.perf_counter()
+        completed: List[GemmProblem] = []
+
+        if self.schedule.allow_ragged_merge:
+            families: Dict[tuple, List] = {}
+            for bucket, count in self.queue.buckets():
+                if not force and not self._ripe(bucket, count, now):
+                    continue
+                families.setdefault(
+                    (bucket.op, bucket.K, bucket.N, bucket.dtype), []
+                ).append(bucket)
+            for fam_buckets in families.values():
+                batch: List[GemmProblem] = []
+                for b in fam_buckets:
+                    batch.extend(
+                        self.queue.pop_batch(
+                            b, self.schedule.max_superkernel_size - len(batch)
+                        )
+                    )
+                    if len(batch) >= self.schedule.max_superkernel_size:
+                        break
+                if batch:
+                    ragged = len({p.x.shape[0] for p in batch}) > 1
+                    completed.extend(self._dispatch(batch, ragged=ragged))
+            return completed
+
+        for bucket, count in self.queue.buckets():
+            if not force and not self._ripe(bucket, count, now):
+                continue
+            while True:
+                batch = self.queue.pop_batch(bucket, self.schedule.max_superkernel_size)
+                if not batch:
+                    break
+                completed.extend(self._dispatch(batch))
+                if len(batch) < self.schedule.max_superkernel_size:
+                    break
+        return completed
+
+    def flush(self) -> List[GemmProblem]:
+        """Force-dispatch everything pending (end-of-benchmark drain)."""
+        return self.pump(force=True)
+
+    def _dispatch(
+        self, batch: List[GemmProblem], ragged: bool = False
+    ) -> List[GemmProblem]:
+        t0 = time.perf_counter()
+        outs = self.cache.execute_ragged(batch) if ragged else self.cache.execute(batch)
+        t1 = time.perf_counter()
+
+        self.stats.dispatches += 1
+        self.stats.problems_completed += len(batch)
+        self.stats.total_flops += sum(p.flops for p in batch)
+        self.stats.busy_time_s += t1 - t0
+
+        for p, out in zip(batch, outs):
+            p.result = out
+            p.completion_time = t1
+            latency = t1 - p.arrival_time
+            self.monitor.record(p.tenant_id, latency, p.slo_s)
+
+        self._evict_stragglers()
+        return batch
+
+    # ---------------------------------------------------------------- isolation
+    def _evict_stragglers(self) -> None:
+        for tid in self.monitor.stragglers():
+            if tid in self.evicted:
+                continue
+            self.evicted.append(tid)
+            if self.on_evict is not None:
+                self.on_evict(tid)
+
+    # ---------------------------------------------------------------- reporting
+    def report(self) -> Dict[str, float]:
+        rep = {
+            "dispatches": float(self.stats.dispatches),
+            "problems": float(self.stats.problems_completed),
+            "achieved_tflops": self.stats.achieved_tflops,
+            "cache_hit_rate": self.cache.stats.hit_rate,
+            "evicted_tenants": float(len(self.evicted)),
+        }
+        rep.update(self.monitor.summary())
+        return rep

@@ -1,0 +1,103 @@
+"""Per-tenant latency tracking: EWMA, SLO attainment, predictability.
+
+"We preserve predictability and isolation during virtualization by
+monitoring inference latencies per-kernel. This allows reallocating
+resources between tenants on-the-fly." (paper section 4)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class TenantLatency:
+    ewma_s: Optional[float] = None
+    count: int = 0
+    slo_violations: int = 0
+    history: List[float] = dataclasses.field(default_factory=list)
+
+    def record(self, latency_s: float, slo_s: float, alpha: float) -> None:
+        self.count += 1
+        if latency_s > slo_s:
+            self.slo_violations += 1
+        self.ewma_s = (
+            latency_s
+            if self.ewma_s is None
+            else alpha * latency_s + (1 - alpha) * self.ewma_s
+        )
+        self.history.append(latency_s)
+
+    def percentile(self, q: float) -> float:
+        if not self.history:
+            return 0.0
+        h = sorted(self.history)
+        idx = min(len(h) - 1, int(q * len(h)))
+        return h[idx]
+
+
+class LatencyMonitor:
+    """Cohort-level latency bookkeeping + straggler detection."""
+
+    def __init__(self, ewma_alpha: float = 0.2, eviction_ratio: float = 1.5):
+        self.alpha = ewma_alpha
+        self.eviction_ratio = eviction_ratio
+        self.tenants: Dict[int, TenantLatency] = {}
+
+    def record(self, tenant_id: int, latency_s: float, slo_s: float) -> None:
+        self.tenants.setdefault(tenant_id, TenantLatency()).record(
+            latency_s, slo_s, self.alpha
+        )
+
+    def cohort_median_ewma(self) -> Optional[float]:
+        vals = [t.ewma_s for t in self.tenants.values() if t.ewma_s is not None]
+        return statistics.median(vals) if vals else None
+
+    def stragglers(self) -> List[int]:
+        """Tenants whose EWMA latency exceeds eviction_ratio x cohort median.
+
+        "CUDA Stream scheduling anomalies typically only create a few
+        stragglers, so we can simply evict degraded workers without
+        significantly impacting total system throughput."
+        """
+        med = self.cohort_median_ewma()
+        if med is None or med == 0.0:
+            return []
+        return [
+            tid
+            for tid, t in self.tenants.items()
+            if t.ewma_s is not None and t.ewma_s > self.eviction_ratio * med
+        ]
+
+    # ------------------------------------------------------------ metrics
+    def predictability_spread(self) -> float:
+        """Max/min inter-tenant mean-latency gap (paper Fig 4: 25% for MPS).
+
+        Returns (max_mean - min_mean) / min_mean over tenants; 0 = perfectly
+        uniform (predictable) cohort.
+        """
+        means = [
+            statistics.mean(t.history) for t in self.tenants.values() if t.history
+        ]
+        if len(means) < 2 or min(means) == 0.0:
+            return 0.0
+        return (max(means) - min(means)) / min(means)
+
+    def summary(self) -> Dict[str, float]:
+        all_lat = [x for t in self.tenants.values() for x in t.history]
+        if not all_lat:
+            return {}
+        h = sorted(all_lat)
+        return {
+            "num_tenants": float(len(self.tenants)),
+            "p50_s": h[len(h) // 2],
+            "p95_s": h[min(len(h) - 1, int(0.95 * len(h)))],
+            "p99_s": h[min(len(h) - 1, int(0.99 * len(h)))],
+            "mean_s": statistics.mean(h),
+            "spread": self.predictability_spread(),
+            "slo_violations": float(
+                sum(t.slo_violations for t in self.tenants.values())
+            ),
+        }

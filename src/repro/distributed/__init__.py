@@ -1,0 +1,9 @@
+"""Sharding rules and mesh utilities for the production (multi-)pod mesh."""
+
+from repro.distributed.sharding import (  # noqa: F401
+    cache_specs,
+    choose_spec,
+    data_axes,
+    input_specs_shardings,
+    param_specs,
+)

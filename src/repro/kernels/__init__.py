@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the space-time scheduler's compute hot-spots.
+
+Layout (per repo convention):
+    <name>.py  -- pl.pallas_call kernel + explicit BlockSpec VMEM tiling
+    ops.py     -- jit'd dispatch wrappers (pallas on TPU / interpret or jnp
+                  reference on CPU)
+    ref.py     -- pure-jnp oracles used by tests and as the CPU fallback
+
+Kernels:
+    batched_gemm    -- THE paper super-kernel: R same-shape GEMMs from
+                       disjoint models merged into one invocation
+                       (cublasSgemmBatched analogue, MXU-tiled)
+    grouped_gemm    -- variable-size batched GEMM via block->group metadata
+                       (MAGMA vbatched analogue; also MoE expert compute)
+    flash_attention -- blockwise online-softmax causal attention
+                       (+ sliding window for gemma3-style local layers)
+    decode_attention-- one-token GQA decode against a KV cache
+    wkv6_scan       -- RWKV-6 data-dependent-decay recurrence, chunked scan
+"""
+
+# Submodules (ops, ref, individual kernels) are imported explicitly by
+# consumers; no eager imports here to keep `import repro.kernels.<k>` cheap.

@@ -1,0 +1,103 @@
+"""The space-time super-kernel: R same-shape GEMMs in ONE pallas_call.
+
+This is the paper's core mechanism adapted to TPU. The GPU prototype used
+``cublasSgemmBatched``; on TPU we put the problem index R on the leading
+grid axis so one kernel invocation streams R independent (M,K)x(K,N)
+problems through the MXU with no per-problem dispatch cost. Each problem's
+weights come from a *different tenant model* — this is inter-model batching,
+not data batching.
+
+Grid: (R, M/bm, N/bn, K/bk), K innermost so a float32 VMEM accumulator can
+live across the K steps of one (r, i, j) output tile. Block shapes default
+to MXU-aligned (128, 128) output tiles with a 512-deep K panel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    """One (r, i, j, k) grid step: acc += X[r, i-block, k-block] @ W[r, k-block, j-block]."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == pl.num_programs(3) - 1)
+    def _store():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def batched_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """out[r] = x[r] @ w[r].
+
+    Args:
+        x: (R, M, K) activations, one sub-problem per tenant.
+        w: (R, K, N) weights, one sub-problem per tenant.
+        bm/bn/bk: VMEM block shape. Output tile (bm, bn) should be MXU
+            aligned (multiples of 128 on TPU); K panel bk bounds the
+            accumulator working set: bm*bk + bk*bn + bm*bn floats in VMEM.
+    Returns:
+        (R, M, N) in ``out_dtype`` (defaults to x.dtype).
+    """
+    if x.ndim != 3 or w.ndim != 3:
+        raise ValueError(f"expected (R,M,K),(R,K,N); got {x.shape}, {w.shape}")
+    R, M, K = x.shape
+    Rw, Kw, N = w.shape
+    if Rw != R or Kw != K:
+        raise ValueError(f"shape mismatch: x {x.shape} vs w {w.shape}")
+    out_dtype = out_dtype or x.dtype
+
+    # Pad every dim up to its block multiple; pallas grids must tile exactly.
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    # keep hardware alignment when the problem is large enough, otherwise
+    # round the block down to the (padded) problem size.
+    Mp, Np, Kp = (pl.cdiv(M, bm_) * bm_, pl.cdiv(N, bn_) * bn_, pl.cdiv(K, bk_) * bk_)
+    if (Mp, Np, Kp) != (M, N, K):
+        x = jnp.pad(x, ((0, 0), (0, Mp - M), (0, Kp - K)))
+        w = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Np - N)))
+
+    grid = (R, Mp // bm_, Np // bn_, Kp // bk_)
+
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda r, i, j, k: (r, i, k)),
+            pl.BlockSpec((1, bk_, bn_), lambda r, i, j, k: (r, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn_), lambda r, i, j, k: (r, i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:, :M, :N]

@@ -1,0 +1,133 @@
+"""One-token GQA decode attention against a KV cache.
+
+serve_step's hot kernel: each sequence has ONE new query token attending to
+a ``cache_len`` KV history. This is memory-bound (roofline: ~2*S*Hkv*D bytes
+streamed per token), so the kernel's job is to stream K/V through VMEM in
+large blocks while the q_per_kv query heads of each KV head ride along as
+the GEMM M dimension (MXU rows).
+
+Grid: (B * Hkv, S/bkv); q rows = q_per_kv heads; online softmax scratch as
+in flash_attention. Variable ``lengths`` masks the tail of each sequence's
+cache (continuous batching: every row may have a different live length).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BKV = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, bkv: int,
+):
+    jk = pl.program_id(1)
+    b_hkv = pl.program_id(0)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (q_per_kv, D)
+    k = k_ref[0]  # (bkv, D)
+    v = v_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (q_per_kv, bkv)
+
+    kv_pos = jk * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    live = len_ref[b_hkv]  # this sequence's cache length
+    mask = kv_pos < live
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(jk == pl.num_programs(1) - 1)
+    def _store():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bkv", "interpret"))
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    bkv: int = DEFAULT_BKV,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token decode attention.
+
+    Args:
+        q: (B, Hq, D) new-token queries.
+        k_cache: (B, Hkv, S, D) key cache (S = allocated cache length).
+        v_cache: (B, Hkv, S, D) value cache.
+        lengths: (B,) int32 live length per sequence (<= S).
+    Returns:
+        (B, Hq, D)
+    """
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    q_per_kv = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    bkv_ = min(bkv, S)
+    Sp = pl.cdiv(S, bkv_) * bkv_
+    if Sp != S:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+
+    qf = q.reshape(B * Hkv, q_per_kv, D)
+    kf = k_cache.reshape(B * Hkv, Sp, D)
+    vf = v_cache.reshape(B * Hkv, Sp, D)
+    # per-(b,hkv) live length, scalar-prefetched for masking
+    lens = jnp.repeat(lengths.astype(jnp.int32), Hkv)
+
+    grid = (B * Hkv, Sp // bkv_)
+    kernel = functools.partial(_decode_kernel, scale=scale, bkv=bkv_)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, q_per_kv, D), lambda bh, jk, lens: (bh, 0, 0)),
+                pl.BlockSpec((1, bkv_, D), lambda bh, jk, lens: (bh, jk, 0)),
+                pl.BlockSpec((1, bkv_, D), lambda bh, jk, lens: (bh, jk, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, q_per_kv, D), lambda bh, jk, lens: (bh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((q_per_kv, 1), jnp.float32),
+                pltpu.VMEM((q_per_kv, 1), jnp.float32),
+                pltpu.VMEM((q_per_kv, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, q_per_kv, D), q.dtype),
+        interpret=interpret,
+    )(lens, qf, kf, vf)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,123 @@
+"""Grouped (variable-size batched) GEMM — the MAGMA-vbatched analogue.
+
+The paper notes that ``cublasSgemmBatched`` requires uniform problem shapes
+and points at MAGMA's variable-size batched SGEMM as the generalization.
+On TPU we express the ragged batch as a *group-aligned row layout*:
+
+    x:   (T, K)   rows sorted by group, each group zero-padded to a multiple
+                  of the row-block size bm
+    w:   (G, K, N) one weight matrix per group
+    block_groups: (T/bm,) int32 — which group each row-block belongs to
+
+One pallas_call then computes ``out[t] = x[t] @ w[group_of(t)]`` with the
+group id scalar-prefetched so the weight BlockSpec can index it. This is
+also exactly the MoE expert-FFN compute pattern (groups = experts), so the
+same kernel serves both the scheduler's ragged super-kernels and MoE layers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _grouped_kernel(block_groups_ref, x_ref, w_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def grouped_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    block_groups: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """out[i*bm:(i+1)*bm] = x[i*bm:(i+1)*bm] @ w[block_groups[i]].
+
+    Args:
+        x: (T, K) group-sorted, group-aligned rows (T % bm == 0).
+        w: (G, K, N) per-group weights.
+        block_groups: (T // bm,) int32 group index per row block.
+    Returns:
+        (T, N).
+    """
+    T, K = x.shape
+    G, Kw, N = w.shape
+    if Kw != K:
+        raise ValueError(f"K mismatch: x {x.shape} vs w {w.shape}")
+    out_dtype = out_dtype or x.dtype
+
+    bm_ = min(bm, T)
+    bn_ = min(bn, N)
+    bk_ = min(bk, K)
+    if T % bm_ != 0:
+        raise ValueError(f"rows T={T} must be a multiple of the row block {bm_}")
+    Np = pl.cdiv(N, bn_) * bn_
+    Kp = pl.cdiv(K, bk_) * bk_
+    if (Np, Kp) != (N, K):
+        x = jnp.pad(x, ((0, 0), (0, Kp - K)))
+        w = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Np - N)))
+
+    num_blocks = T // bm_
+    grid = (num_blocks, Np // bn_, Kp // bk_)
+
+    out = pl.pallas_call(
+        _grouped_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm_, bk_), lambda i, j, k, gids: (i, k)),
+                pl.BlockSpec((1, bk_, bn_), lambda i, j, k, gids: (gids[i], k, j)),
+            ],
+            out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k, gids: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, Np), out_dtype),
+        interpret=interpret,
+    )(block_groups.astype(jnp.int32), x, w)
+    return out[:, :N]
+
+
+def make_group_layout(
+    group_sizes: np.ndarray, bm: int = DEFAULT_BM
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Host-side helper: padded row offsets + per-block group ids.
+
+    Given per-group row counts, returns (row_offsets, block_groups, T_padded)
+    where each group's rows are padded up to a multiple of ``bm`` so blocks
+    never straddle a group boundary.
+    """
+    group_sizes = np.asarray(group_sizes, dtype=np.int64)
+    padded = ((group_sizes + bm - 1) // bm) * bm
+    offsets = np.concatenate([[0], np.cumsum(padded)])
+    block_groups = np.repeat(np.arange(len(group_sizes)), padded // bm).astype(np.int32)
+    return offsets.astype(np.int64), block_groups, int(offsets[-1])

@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+)
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination on 512 placeholder host devices, print memory/cost analysis,
+and write the roofline record.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k --mesh pod1
+    python -m repro.launch.dryrun --all --mesh pod1 --out experiments/dryrun
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.config import INPUT_SHAPES, get_config, get_shape, list_configs
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step, eligible
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, out_dir=None, verbose=True,
+            remat: str = "block", policy: str = "fsdp", tp_acts: str = "auto",
+            tenants: int = 1, microbatch: int = 1):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = eligible(cfg, shape_name)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "remat": remat,
+              "policy": policy, "tp_acts": tp_acts, "tenants": tenants,
+              "microbatch": microbatch}
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = why
+        _write(record, out_dir)
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: SKIP ({why})")
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        step_fn, args, in_specs, out_specs = build_step(
+            cfg, shape_name, mesh, remat=remat, policy=policy, tenants=tenants,
+            microbatch=microbatch)
+        from repro.distributed.constraints import use_mesh
+        from repro.distributed.sharding import to_shardings
+        in_sh = to_shardings(in_specs, mesh)
+        out_sh = to_shardings(out_specs, mesh)
+        # measured (EXPERIMENTS.md §Perf pair 3 iter 5): disabling TP
+        # activation constraints interacts badly with per-block remat
+        # (weights re-gathered every recompute, 8x collective regression),
+        # so "auto" resolves to ON for every shape kind.
+        tp_on = tp_acts != "off"
+        with mesh, use_mesh(mesh, tp_activations=tp_on):
+            jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            raw_cost = lowered.cost_analysis() or {}
+
+        mem = compiled.memory_analysis()
+        hlo_text = compiled.as_text()
+        coll = rl.collective_bytes(hlo_text)
+
+        flops = float(raw_cost.get("flops", 0.0))
+        bytes_accessed = float(raw_cost.get("bytes accessed", 0.0))
+        ana = rl.analytic_cost(cfg, shape, remat=(remat == "block"))
+        ana_coll = rl.analytic_collectives(
+            cfg, shape,
+            # tenant-stacked serving forces tp weights internally
+            policy="tp" if tenants > 1 else policy,
+            tp_acts=tp_on,
+            pods=2 if mesh_name == "pod2" else 1,
+        )
+        report = rl.RooflineReport(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            hlo_flops=flops, hlo_bytes=bytes_accessed, coll_bytes=coll,
+            model_flops=rl.model_flops_for(cfg, shape),
+            analytic_flops=ana["flops"], analytic_bytes=ana["hbm_bytes"],
+            analytic_coll=ana_coll,
+        )
+        record.update(report.to_dict())
+        record["status"] = "ok"
+        record["lower_s"] = round(t_lower, 2)
+        record["compile_s"] = round(t_compile, 2)
+        record["memory_analysis"] = _mem_dict(mem, chips)
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+                  f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+            print(f"  memory_analysis: {record['memory_analysis']}")
+            print(f"  cost_analysis: flops={flops:.3e} bytes={bytes_accessed:.3e}")
+            print(f"  collectives: { {k: v for k, v in coll.items() if v} }")
+            print(f"  roofline: compute={report.t_compute:.3e}s "
+                  f"memory={report.t_memory:.3e}s collective={report.t_collective:.3e}s "
+                  f"-> {report.bottleneck}-bound; useful-FLOPs ratio "
+                  f"{report.useful_flops_ratio:.3f}")
+    except Exception as e:  # noqa: BLE001 — record the failure, it's a bug to fix
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: ERROR {record['error']}")
+    _write(record, out_dir)
+    return record
+
+
+def _mem_dict(mem, chips):
+    if mem is None:
+        return {}
+    keys = [
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+    ]
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    total = out.get("argument_size_in_bytes", 0) + out.get("temp_size_in_bytes", 0) \
+        + out.get("output_size_in_bytes", 0)
+    # memory_analysis reports per-device sizes for SPMD executables
+    out["approx_total_per_device_bytes"] = total
+    out["approx_total_per_device_gib"] = round(total / 2**30, 3)
+    return out
+
+
+def _write(record, out_dir):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if record.get("policy", "fsdp") == "fsdp" else f"__{record['policy']}"
+    if record.get("tenants", 1) > 1:
+        suffix += f"__R{record['tenants']}"
+    if record.get("microbatch", 1) > 1:
+        suffix += f"__mb{record['microbatch']}"
+    path = os.path.join(
+        out_dir,
+        f"{record['arch']}__{record['shape']}__{record['mesh']}{suffix}.json",
+    )
+    record = dict(record)
+    record.pop("traceback", None)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--remat", default="block", choices=["block", "none"])
+    ap.add_argument("--policy", default="fsdp",
+                    choices=["fsdp", "tp", "replicate", "auto"])
+    ap.add_argument("--tp-acts", default="auto", choices=["auto", "on", "off"],
+                    help="tensor-parallel activation constraints (auto: off for train, on for serve)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="R>1: tenant-stacked multi-tenant serve step (decode shapes)")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="k>1: gradient-accumulation microbatching (train shapes)")
+    args = ap.parse_args()
+
+    if args.all:
+        archs = list_configs()
+        shapes = list(INPUT_SHAPES)
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        archs, shapes = [args.arch], [args.shape]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            rec = run_one(arch, shape, args.mesh, out_dir=args.out,
+                          remat=args.remat, policy=args.policy,
+                          tp_acts=args.tp_acts, tenants=args.tenants,
+                          microbatch=args.microbatch)
+            if rec["status"] == "error":
+                failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the 512-device
+XLA_FLAGS override belongs exclusively to dryrun.py's first two lines.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Degenerate 1-device mesh for CPU smoke paths."""
+    return jax.make_mesh((1, model), ("data", "model"))

@@ -1,0 +1,228 @@
+"""Abstract step builders for the dry-run: ShapeDtypeStruct stand-ins for
+every model input, the step callables, and their shardings.
+
+No device allocation happens here — params/caches/inputs are all abstract
+(jax.eval_shape), the same pattern real launchers then feed with actual
+arrays.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import InputShape, ModelConfig, get_shape
+from repro.distributed import sharding as shd
+from repro.models import Model, build_model
+from repro.training.optimizer import adamw_init, adamw_update, lr_schedule
+
+
+def abstract_params(model: Model) -> Any:
+    return jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+
+
+def abstract_caches(model: Model, batch: int, seq_len: int) -> Any:
+    return jax.eval_shape(lambda: model.init_caches(batch, seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the data-plane inputs of one step."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.num_prefix_embeddings:
+            fed = cfg.frontend_embed_dim or cfg.d_model
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_embeddings, fed), dt
+            )
+    else:  # decode
+        specs["token"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        specs["lengths"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return specs
+
+
+def build_step(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    remat: str = "block",
+    policy: str = "fsdp",
+    tenants: int = 1,
+    microbatch: int = 1,
+) -> Tuple[Any, Tuple, Any, Any]:
+    """Returns (step_fn, abstract_args, in_shardings, out_shardings).
+
+    policy: weight-sharding policy (see distributed.sharding.param_specs).
+    tenants: R > 1 builds the SPACE-TIME MULTI-TENANT serve step — R
+        tenants' weights stacked on a leading axis sharded over `data`,
+        the global batch split across tenants, ONE vmapped program. This
+        is the paper's inter-model batching expressed at pod scale
+        (decode/prefill shapes only).
+    microbatch: k > 1 splits the train batch into k sequential
+        gradient-accumulation slices (lax.scan), cutting activation memory
+        ~k x at unchanged math (grads averaged before the optimizer step).
+    """
+    shape = get_shape(shape_name)
+    model = build_model(cfg, remat=remat)
+    B, S = shape.global_batch, shape.seq_len
+    if tenants > 1:
+        return _build_multitenant_serve(cfg, model, shape, mesh, policy, tenants)
+
+    p_abs = abstract_params(model)
+    p_spec = shd.param_specs(p_abs, mesh, policy)
+    in_data = input_specs(cfg, shape)
+    d_spec = shd.input_specs_shardings(mesh, B, shape.kind)
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw_init, p_abs)
+        opt_spec = shd.opt_state_specs(p_abs, mesh, policy)
+        opt_spec = type(opt_abs)(step=P(), mu=opt_spec, nu=opt_spec)
+
+        if B % microbatch != 0:
+            raise ValueError(f"global batch {B} not divisible by microbatch {microbatch}")
+
+        def train_step(params, opt, tokens, labels, prefix_embeds=None):
+            def loss_fn(p, tok, lab, pref):
+                loss, m = model.forward_train(p, tok, lab, pref)
+                return loss
+
+            if microbatch == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(
+                    params, tokens, labels, prefix_embeds
+                )
+            else:
+                k = microbatch
+                mb = B // k
+                tok_k = tokens.reshape(k, mb, S)
+                lab_k = labels.reshape(k, mb, S)
+                pref_k = (
+                    None
+                    if prefix_embeds is None
+                    else prefix_embeds.reshape(k, mb, *prefix_embeds.shape[1:])
+                )
+
+                def body(acc, xs):
+                    tok, lab, pref = xs
+                    l, g = jax.value_and_grad(loss_fn)(params, tok, lab, pref)
+                    loss_acc, grads_acc = acc
+                    return (
+                        loss_acc + l,
+                        jax.tree.map(jnp.add, grads_acc, g),
+                    ), None
+
+                zeros = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+                (loss, grads), _ = jax.lax.scan(
+                    body,
+                    (jnp.zeros((), jnp.float32), zeros),
+                    (tok_k, lab_k, pref_k) if pref_k is not None else (tok_k, lab_k, None),
+                )
+                loss = loss / k
+                grads = jax.tree.map(lambda g: g / k, grads)
+
+            lr = lr_schedule(opt.step, 3e-4, 100, 1000)
+            params, opt, om = adamw_update(grads, opt, params, lr)
+            return params, opt, loss
+
+        args = [p_abs, opt_abs, in_data["tokens"], in_data["labels"]]
+        in_specs = [p_spec, opt_spec, d_spec["tokens"], d_spec["labels"]]
+        if "prefix_embeds" in in_data:
+            args.append(in_data["prefix_embeds"])
+            in_specs.append(d_spec["prefix_embeds"])
+        out_specs = (p_spec, opt_spec, P())
+        return train_step, tuple(args), tuple(in_specs), out_specs
+
+    if shape.kind == "prefill":
+        def prefill_step(params, tokens, prefix_embeds=None):
+            return model.forward_prefill(
+                params, tokens, cache_len=S, prefix_embeds=prefix_embeds
+            )
+
+        args = [p_abs, in_data["tokens"]]
+        in_specs = [p_spec, d_spec["tokens"]]
+        if "prefix_embeds" in in_data:
+            args.append(in_data["prefix_embeds"])
+            in_specs.append(d_spec["prefix_embeds"])
+        cache_abs = abstract_caches(model, B, S)
+        c_spec = shd.cache_specs(cache_abs, mesh, B)
+        out_specs = (P(d_spec["token"][0] if B > 1 else None, None), c_spec)
+        return prefill_step, tuple(args), tuple(in_specs), out_specs
+
+    # decode
+    cache_abs = abstract_caches(model, B, S)
+    c_spec = shd.cache_specs(cache_abs, mesh, B)
+
+    def serve_step(params, token, caches, lengths):
+        return model.forward_decode(params, token, caches, lengths)
+
+    args = (p_abs, in_data["token"], cache_abs, in_data["lengths"])
+    in_specs = (p_spec, d_spec["token"], c_spec, d_spec["lengths"])
+    out_specs = (P(d_spec["token"][0], None), c_spec)
+    return serve_step, args, in_specs, out_specs
+
+
+def _build_multitenant_serve(cfg, model, shape, mesh, policy, R):
+    """Tenant-stacked serve_step: params/caches/inputs carry a leading
+    tenant axis sharded over `data`; per-tenant batch = global_batch / R."""
+    from jax.sharding import PartitionSpec as P
+
+    if shape.kind != "decode":
+        raise ValueError("multi-tenant step builder supports decode shapes only")
+    B_total, S = shape.global_batch, shape.seq_len
+    if B_total % R != 0:
+        raise ValueError(f"global batch {B_total} not divisible by tenants {R}")
+    B = B_total // R
+
+    def stack_r(tree):
+        return jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((R,) + l.shape, l.dtype), tree
+        )
+
+    # tenant axis takes `data` when divisible; otherwise tenants replicate
+    # and `data` stays on the per-tenant batch inside the inner specs.
+    tenant_axis = "data" if R % mesh.shape["data"] == 0 else None
+
+    def prepend(spec_tree, axis):
+        def fix(s: P) -> P:
+            if axis is None:
+                return P(None, *s)
+            inner = [
+                None if (a == axis or (isinstance(a, tuple) and axis in a)) else a
+                for a in s
+            ]
+            return P(axis, *inner)
+
+        return jax.tree.map(fix, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+    p_abs = stack_r(abstract_params(model))
+    p_spec = prepend(shd.param_specs(abstract_params(model), mesh, "tp"), tenant_axis)
+    cache_abs = stack_r(abstract_caches(model, B, S))
+    c_spec = prepend(shd.cache_specs(abstract_caches(model, B, S), mesh, B), tenant_axis)
+
+    token = jax.ShapeDtypeStruct((R, B), jnp.int32)
+    lengths = jax.ShapeDtypeStruct((R, B), jnp.int32)
+    t_spec = P(tenant_axis, None if tenant_axis else "data")
+
+    def serve_step(params, token, caches, lengths):
+        return jax.vmap(model.forward_decode)(params, token, caches, lengths)
+
+    args = (p_abs, token, cache_abs, lengths)
+    in_specs = (p_spec, t_spec, c_spec, t_spec)
+    out_specs = (P(tenant_axis, None if tenant_axis else "data", None), c_spec)
+    return serve_step, args, in_specs, out_specs
+
+
+def eligible(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """Is (arch, shape) runnable? long_500k needs sub-quadratic attention."""
+    shape = get_shape(shape_name)
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, "skipped: pure full-attention arch (no sub-quadratic variant)"
+    return True, ""

@@ -1,0 +1,10 @@
+"""Pure-JAX model substrate.
+
+Every assigned architecture is assembled by ``transformer.build_model``
+from one ``ModelConfig``; parameters are plain pytrees (nested dicts of
+arrays), layers are pure functions, and the layer stack runs as a
+``lax.scan`` over the pattern's smallest repeating unit so full-scale
+dry-runs lower to compact HLO.
+"""
+
+from repro.models.transformer import Model, build_model  # noqa: F401

@@ -1,0 +1,108 @@
+"""Mixture-of-experts FFN: top-k router + capacity-based dense dispatch.
+
+Dispatch is the einsum/one-hot (Switch-style) formulation with capacity
+computed PER SEQUENCE, keeping the batch dim intact: dispatch tensor is
+(B, S, E, C) with C = cf * S * k / E, so under batch-sharded SPMD each
+device builds only its local slab and no global cumsum/sort crosses device
+boundaries. Experts shard over the `model` mesh axis. The grouped Pallas
+kernel (repro.kernels.grouped_gemm) provides the sorted-rows alternative
+used by the space-time scheduler's ragged super-kernels on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.constraints import constrain
+from repro.models import layers
+
+Params = Dict[str, jax.Array]
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    assert cfg.moe is not None
+    m = cfg.moe
+    keys = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, m.expert_d_ff, m.num_experts
+
+    def stack_init(k, d_in, d_out):
+        ks = jax.random.split(k, e)
+        return jnp.stack([layers.dense_init(ki, d_in, d_out, dtype) for ki in ks])
+
+    p: Params = {
+        "router": layers.dense_init(keys[0], d, e, jnp.float32),
+        "w_gate": stack_init(keys[1], d, f),   # (E, d, f)
+        "w_up": stack_init(keys[2], d, f),     # (E, d, f)
+        "w_down": stack_init(keys[3], f, d),   # (E, f, d)
+    }
+    if m.num_shared_experts:
+        p["shared"] = layers.mlp_init(
+            keys[4], d, m.num_shared_experts * f, cfg.mlp_gated, dtype
+        )
+    return p
+
+
+def moe_forward(
+    params: Params, x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Route tokens through top-k experts.
+
+    x: (B, S, d) -> (y: (B, S, d), aux_loss: scalar load-balance loss).
+    """
+    assert cfg.moe is not None
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.experts_per_token
+
+    logits = x.astype(jnp.float32) @ params["router"]        # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)          # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)  # (B, S, K, E)
+    # load-balance auxiliary loss (Switch-style), averaged over batch+seq
+    tokens_per_expert = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))  # (E,)
+    prob_per_expert = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(tokens_per_expert * prob_per_expert) * m.router_aux_loss_weight
+
+    # per-sequence expert capacity (cumsum stays local to each sequence)
+    capacity = int(max(1, m.capacity_factor * S * K / E))
+    flat = onehot.reshape(B, S * K, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(B, S, K, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (B, S, K)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep
+
+    pos_oh = jax.nn.one_hot(
+        jnp.where(keep, pos, capacity).astype(jnp.int32), capacity, dtype=x.dtype
+    )                                                        # (B, S, K, C)
+    disp = jnp.einsum("bske,bskc->bsec", onehot.astype(x.dtype), pos_oh)
+    comb = jnp.einsum(
+        "bske,bskc,bsk->bsec",
+        onehot,
+        pos_oh.astype(jnp.float32),
+        gate_vals.astype(jnp.float32),
+    ).astype(x.dtype)
+    disp = constrain(disp, "batch", None, "model", None, force=True)
+    comb = constrain(comb, "batch", None, "model", None, force=True)
+
+    xe = jnp.einsum("bsec,bsd->becd", disp, x)               # (B, E, C, d)
+    xe = constrain(xe, "batch", "model", None, None, force=True)
+    if cfg.mlp_gated:
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, params["w_gate"]))
+        h = h * jnp.einsum("becd,edf->becf", xe, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xe, params["w_up"]))
+    h = constrain(h, "batch", "model", None, None, force=True)
+    ye = jnp.einsum("becf,efd->becd", h, params["w_down"])   # (B, E, C, d)
+    y = jnp.einsum("bsec,becd->bsd", comb, ye)
+
+    if m.num_shared_experts:
+        y = y + layers.mlp(params["shared"], x, cfg.mlp_gated)
+    return y, aux

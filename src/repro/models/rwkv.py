@@ -1,0 +1,199 @@
+"""RWKV-6 "Finch" block: time-mix (WKV6 recurrence) + channel-mix.
+
+Data-dependent decay: per-token decay logits w_t are produced by a small
+LoRA on the token-shift-mixed input (the Finch mechanism). The recurrence
+itself runs through ``repro.kernels.ops.wkv6_scan`` (Pallas on TPU).
+Decode state: (wkv_state (B,H,N,P), shift_tm (B,d), shift_cm (B,d)).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.constraints import constrain
+from repro.kernels import ops, ref
+from repro.models import layers
+
+Params = Dict[str, jax.Array]
+Cache = Dict[str, jax.Array]
+
+LORA_DIM = 64
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    N = s.head_dim if s is not None else 64
+    H = cfg.d_model // N
+    return H, N
+
+
+def rwkv6_init(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    H, N = _dims(cfg)
+    keys = jax.random.split(key, 12)
+    return {
+        # time-mix
+        "mu": (jax.random.uniform(keys[0], (5, d)) * 0.5 + 0.25).astype(dtype),  # r,k,v,g,w
+        "wr": layers.dense_init(keys[1], d, d, dtype),
+        "wk": layers.dense_init(keys[2], d, d, dtype),
+        "wv": layers.dense_init(keys[3], d, d, dtype),
+        "wg": layers.dense_init(keys[4], d, d, dtype),
+        "wo": layers.dense_init(keys[5], d, d, dtype),
+        "w_base": (jnp.zeros((d,)) - 4.0).astype(jnp.float32),
+        "w_lora_a": layers.dense_init(keys[6], d, LORA_DIM, dtype),
+        "w_lora_b": (jnp.zeros((LORA_DIM, d))).astype(dtype),
+        "u": (jax.random.normal(keys[7], (H, N)) * 0.1).astype(jnp.float32),
+        # channel-mix
+        "mu_ck": (jax.random.uniform(keys[8], (d,)) * 0.5 + 0.25).astype(dtype),
+        "mu_cr": (jax.random.uniform(keys[9], (d,)) * 0.5 + 0.25).astype(dtype),
+        "ck": layers.dense_init(keys[10], d, cfg.d_ff, dtype),
+        "cv": layers.dense_init(keys[11], cfg.d_ff, d, dtype),
+        "cr": layers.dense_init(keys[0], d, d, dtype),
+        "norm_tm": layers.rmsnorm_init(d, dtype),
+        "norm_cm": layers.rmsnorm_init(d, dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype) -> Cache:
+    d = cfg.d_model
+    H, N = _dims(cfg)
+    return {
+        "wkv": jnp.zeros((batch, H, N, N), jnp.float32),  # state (N keys x P=N vals)
+        "shift_tm": jnp.zeros((batch, d), dtype),
+        "shift_cm": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: (B,S,d); prev: (B,d) last token of previous segment."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix(params: Params, x: jax.Array, shifted: jax.Array, cfg: ModelConfig):
+    """Shared projection math for scan + step paths. x: (B,S,d)."""
+    H, N = _dims(cfg)
+    B, S, d = x.shape
+    mu = params["mu"]
+    xr = x + (shifted - x) * mu[0]
+    xk = x + (shifted - x) * mu[1]
+    xv = x + (shifted - x) * mu[2]
+    xg = x + (shifted - x) * mu[3]
+    xw = x + (shifted - x) * mu[4]
+    r = constrain(xr @ params["wr"], "batch", None, "model")
+    k = constrain(xk @ params["wk"], "batch", None, "model")
+    v = constrain(xv @ params["wv"], "batch", None, "model")
+    g = jax.nn.silu(xg @ params["wg"])
+    w = params["w_base"] + (jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]).astype(jnp.float32)
+    return r, k, v, g, w
+
+
+def time_mix_forward(
+    params: Params, x: jax.Array, cfg: ModelConfig, prev: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence WKV6. Returns (out (B,S,d), last_x (B,d))."""
+    H, N = _dims(cfg)
+    B, S, d = x.shape
+    shifted = _token_shift(x, prev)
+    r, k, v, g, w = _time_mix(params, x, shifted, cfg)
+
+    def heads(t):  # (B,S,d) -> (B*H, S, N)
+        return t.reshape(B, S, H, N).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+
+    u = jnp.broadcast_to(params["u"][None], (B, H, N)).reshape(B * H, N)
+    o = ops.wkv6_scan(heads(r), heads(k), heads(v), heads(w.astype(r.dtype)), u)
+    o = o.reshape(B, H, S, N).transpose(0, 2, 1, 3).reshape(B, S, d)
+    o = layers.groupnorm_heads(o, H) * g
+    return o @ params["wo"], x[:, -1, :]
+
+
+def channel_mix_forward(
+    params: Params, x: jax.Array, cfg: ModelConfig, prev: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    shifted = _token_shift(x, prev)
+    xk = x + (shifted - x) * params["mu_ck"]
+    xr = x + (shifted - x) * params["mu_cr"]
+    k = constrain(jnp.square(jax.nn.relu(xk @ params["ck"])), "batch", None, "model")
+    return (k @ params["cv"]) * jax.nn.sigmoid(xr @ params["cr"]), x[:, -1, :]
+
+
+def rwkv6_block(
+    params: Params, x: jax.Array, cfg: ModelConfig, cache: Cache, mode: str
+) -> Tuple[jax.Array, Cache]:
+    """Full RWKV6 block (time-mix + channel-mix), pre-norm residual.
+
+    mode: "train" (no state tracking), "prefill" (sequence + final state for
+    serving continuity) or "decode" (S == 1, O(1) step).
+    """
+    new_cache = dict(cache)
+    h = layers.rmsnorm(params["norm_tm"], x, cfg.norm_eps)
+    if mode == "train":
+        tm, _ = time_mix_forward(params, h, cfg, cache["shift_tm"])
+    elif mode == "prefill":
+        # Prefill honors the INCOMING wkv/shift state (zero for fresh
+        # sequences; non-zero for chunked-prefill continuation), so the
+        # jnp scan with init_state is used rather than the zero-init
+        # Pallas kernel (kernel init-state support: future work).
+        H, N = _dims(cfg)
+        B, S, d = h.shape
+        shifted = _token_shift(h, cache["shift_tm"])
+        r, k, v, g, w = _time_mix(params, h, shifted, cfg)
+        heads = lambda t: t.reshape(B, S, H, N).transpose(0, 2, 1, 3).reshape(B * H, S, N)
+        state = cache["wkv"].reshape(B * H, N, N)
+        u = jnp.broadcast_to(params["u"][None], (B, H, N)).reshape(B * H, N)
+        o = ref.wkv6_scan(
+            heads(r), heads(k), heads(v), heads(w.astype(r.dtype)), u,
+            init_state=state,
+        )
+        o = o.reshape(B, H, S, N).transpose(0, 2, 1, 3).reshape(B, S, d)
+        tm = (layers.groupnorm_heads(o, H) * g) @ params["wo"]
+        state = _wkv_final_state(heads(k), heads(v), heads(w), state)
+        new_cache["wkv"] = state.reshape(B, H, N, N)
+        new_cache["shift_tm"] = h[:, -1, :]
+    else:
+        tm, new_wkv, last = _time_mix_step(params, h[:, 0, :], cfg, cache)
+        tm = tm[:, None, :]
+        new_cache["wkv"] = new_wkv
+        new_cache["shift_tm"] = last
+    x = x + tm
+
+    h = layers.rmsnorm(params["norm_cm"], x, cfg.norm_eps)
+    cm, last_cm = channel_mix_forward(params, h, cfg, cache["shift_cm"])
+    new_cache["shift_cm"] = last_cm
+    return x + cm, new_cache
+
+
+def _time_mix_step(params: Params, x: jax.Array, cfg: ModelConfig, cache: Cache):
+    """Single-token time-mix. x: (B, d)."""
+    H, N = _dims(cfg)
+    B, d = x.shape
+    x3 = x[:, None, :]
+    shifted = cache["shift_tm"][:, None, :]
+    r, k, v, g, w = _time_mix(params, x3, shifted, cfg)
+    rh = r.reshape(B, H, N).reshape(B * H, N)
+    kh = k.reshape(B, H, N).reshape(B * H, N)
+    vh = v.reshape(B, H, N).reshape(B * H, N)
+    wh = w.reshape(B, H, N).reshape(B * H, N)
+    u = jnp.broadcast_to(params["u"][None], (B, H, N)).reshape(B * H, N)
+    state = cache["wkv"].reshape(B * H, N, N)
+    new_state, o = ref.wkv6_step(state, rh, kh, vh, wh, u)
+    o = o.reshape(B, d)
+    o = layers.groupnorm_heads(o, H) * g[:, 0, :]
+    return o @ params["wo"], new_state.reshape(B, H, N, N), x
+
+
+def _wkv_final_state(k: jax.Array, v: jax.Array, w: jax.Array, state: jax.Array):
+    """Roll the WKV state over a sequence (no outputs). k/v/w: (BH,S,N)."""
+    def step(s, inp):
+        k_t, v_t, w_t = inp
+        decay = jnp.exp(-jnp.exp(w_t.astype(jnp.float32)))
+        kv = jnp.einsum("bn,bv->bnv", k_t.astype(jnp.float32), v_t.astype(jnp.float32))
+        return decay[..., None] * s + kv, None
+
+    s, _ = jax.lax.scan(
+        step, state, (k.transpose(1, 0, 2), v.transpose(1, 0, 2), w.transpose(1, 0, 2))
+    )
+    return s

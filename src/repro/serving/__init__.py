@@ -1,0 +1,10 @@
+"""Multi-tenant inference serving runtime.
+
+The model-level embodiment of space-time scheduling: R tenants of one
+architecture run as ONE vmapped program over stacked weights/caches
+(every layer's GEMMs become inter-model batched super-kernels), with a
+slot-based continuous batcher feeding the decode loop.
+"""
+
+from repro.serving.engine import EngineConfig, MultiTenantEngine  # noqa: F401
+from repro.serving.request import InferenceRequest, RequestState  # noqa: F401

@@ -1,0 +1,252 @@
+"""Multi-tenant inference engine: space-time scheduled decode loop.
+
+R tenants of the same architecture (different weights) are served by ONE
+jitted, tenant-vmapped decode step over stacked params + stacked caches —
+every projection/FFN GEMM in the model becomes an inter-model batched
+super-kernel, which is the paper's mechanism applied to whole models.
+
+``mode="time_only"`` provides the contrast case: the same work dispatched
+per-tenant sequentially (one program per tenant per step), modeling CUDA
+context time-slicing. Used by benchmarks/fig3_latency.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.slo import LatencyMonitor
+from repro.core.tenancy import stack_params
+from repro.models import Model
+from repro.serving.kv_cache import SlotManager
+from repro.serving.request import InferenceRequest, RequestState
+from repro.serving.sampling import SamplingParams, sample
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_tenants: int
+    slots_per_tenant: int = 4
+    cache_len: int = 256
+    mode: str = "space_time"        # "space_time" | "time_only"
+    # >0: prefill prompts in fixed-size chunks (one compile per chunk
+    # length instead of per prompt length). Requires a non-sliding-window
+    # architecture (chunked continuation needs linear caches).
+    prefill_chunk: int = 0
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    seed: int = 0
+    ewma_alpha: float = 0.2
+    eviction_ratio: float = 10.0    # effectively off unless benchmarking isolation
+
+
+class MultiTenantEngine:
+    def __init__(self, model: Model, tenant_params: List[Any], config: EngineConfig):
+        assert len(tenant_params) == config.num_tenants
+        self.model = model
+        self.cfg = config
+        self.stacked_params = stack_params(tenant_params)
+        self._tenant_params = tenant_params
+
+        R, B = config.num_tenants, config.slots_per_tenant
+        single = model.init_caches(B, config.cache_len)
+        self.caches = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (R,) + x.shape).copy(), single
+        )
+        self.slots = SlotManager(R, B)
+        self.monitor = LatencyMonitor(config.ewma_alpha, config.eviction_ratio)
+
+        self.queue: List[InferenceRequest] = []
+        self.active: Dict[tuple, InferenceRequest] = {}  # (tenant, slot) -> req
+        self.finished: List[InferenceRequest] = []
+        self.last_token = np.zeros((R, B), np.int32)
+        self.steps = 0
+        self.decode_tokens = 0
+        self._sample_key = jax.random.PRNGKey(config.seed)
+
+        # ---- jitted programs -------------------------------------------------
+        def _decode_all(params, tokens, caches, lengths):
+            return jax.vmap(model.forward_decode)(params, tokens, caches, lengths)
+
+        self._decode_all = jax.jit(_decode_all)
+
+        def _decode_one(params, tokens, caches, lengths):
+            return model.forward_decode(params, tokens, caches, lengths)
+
+        self._decode_one = jax.jit(_decode_one)
+
+        def _prefill(params, tokens):
+            return model.forward_prefill(params, tokens, cache_len=config.cache_len)
+
+        self._prefill = jax.jit(_prefill)
+
+        def _prefill_cont(params, tokens, caches, start):
+            return model.forward_prefill(
+                params, tokens, cache_len=config.cache_len,
+                caches=caches, start=start,
+            )
+
+        self._prefill_cont = jax.jit(_prefill_cont)
+
+    # ------------------------------------------------------------------ intake
+    def submit(self, req: InferenceRequest, now: Optional[float] = None) -> None:
+        req.arrival_time = now if now is not None else time.perf_counter()
+        req.state = RequestState.QUEUED
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------ prefill
+    def _admit(self) -> None:
+        # Prefill runs at EXACT prompt length (one compile per distinct
+        # length). Padding would corrupt SSM/RWKV recurrent state; callers
+        # wanting fewer compiles should bucket their prompt lengths.
+        remaining = []
+        for req in self.queue:
+            slot = self.slots.acquire(req.tenant_id, req.request_id)
+            if slot is None:
+                remaining.append(req)
+                continue
+            req.slot = slot
+            req.state = RequestState.PREFILLING
+            params_t = jax.tree.map(lambda x: x[req.tenant_id], self.stacked_params)
+            tokens = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
+            logits, cache = self._run_prefill(params_t, tokens)
+            tok = int(jnp.argmax(logits[0]))
+            req.generated.append(tok)
+            req.first_token_time = time.perf_counter()
+            req.prefill_time = req.first_token_time
+            self._scatter_slot(req.tenant_id, slot, cache)
+            self.slots.set_length(req.tenant_id, slot, tokens.shape[1])
+            self.last_token[req.tenant_id, slot] = tok
+            req.state = RequestState.DECODING
+            self.active[(req.tenant_id, slot)] = req
+        self.queue = remaining
+
+    def _run_prefill(self, params_t, tokens):
+        """Whole-prompt or chunked prefill (bounded compile count)."""
+        C = self.cfg.prefill_chunk
+        S = tokens.shape[1]
+        if C <= 0 or S <= C:
+            return self._prefill(params_t, tokens)
+        logits, cache = self._prefill(params_t, tokens[:, :C])
+        pos = C
+        while pos < S:
+            n = min(C, S - pos)  # ragged tail compiles once per tail length
+            logits, cache = self._prefill_cont(
+                params_t, tokens[:, pos:pos + n], cache, jnp.int32(pos))
+            pos += n
+        return logits, cache
+
+    def _scatter_slot(self, tenant: int, slot: int, single_cache: Any) -> None:
+        """Insert a prefilled (batch=1) cache into the stacked cohort cache."""
+
+        def upd(big: jax.Array, small: jax.Array, slot_axis: int) -> jax.Array:
+            idx = [0] * big.ndim
+            idx[0] = tenant
+            idx[slot_axis] = slot
+            return jax.lax.dynamic_update_slice(
+                big, small[None].astype(big.dtype), tuple(idx)
+            )
+
+        # unit caches: leaf (R, reps, B, ...) -> slot axis 2
+        self.caches["unit"] = jax.tree.map(
+            lambda big, small: upd(big, small, 2),
+            self.caches["unit"],
+            single_cache["unit"],
+        )
+        # rem caches: leaf (R, B, ...) -> slot axis 1
+        self.caches["rem"] = jax.tree.map(
+            lambda big, small: upd(big, small, 1),
+            self.caches["rem"],
+            single_cache["rem"],
+        )
+
+    # ------------------------------------------------------------------ decode
+    def _lengths(self) -> np.ndarray:
+        R, B = self.cfg.num_tenants, self.cfg.slots_per_tenant
+        out = np.zeros((R, B), np.int32)
+        for t in range(R):
+            out[t] = self.slots.lengths(t)
+        return out
+
+    def step(self) -> int:
+        """One engine iteration: admit + one decode step. Returns #tokens."""
+        self._admit()
+        if not self.active:
+            return 0
+        lengths = jnp.asarray(self._lengths())
+        tokens = jnp.asarray(self.last_token)
+        t0 = time.perf_counter()
+
+        per_tenant_time: Dict[int, float] = {}
+        if self.cfg.mode == "space_time":
+            logits, self.caches = self._decode_all(
+                self.stacked_params, tokens, self.caches, lengths
+            )
+            logits = jax.block_until_ready(logits)
+        else:  # time_only: sequential per-tenant dispatch
+            outs = []
+            new_caches = []
+            for t in range(self.cfg.num_tenants):
+                tt0 = time.perf_counter()
+                params_t = jax.tree.map(lambda x: x[t], self.stacked_params)
+                caches_t = jax.tree.map(lambda x: x[t], self.caches)
+                lg, nc = self._decode_one(params_t, tokens[t], caches_t, lengths[t])
+                outs.append(jax.block_until_ready(lg))
+                new_caches.append(nc)
+                # a tenant's request latency includes waiting for every
+                # tenant AHEAD of it in the time-slice order (the paper's
+                # linear-slowdown mechanism)
+                per_tenant_time[t] = time.perf_counter() - t0
+            logits = jnp.stack(outs)
+            self.caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        step_time = time.perf_counter() - t0
+
+        if self.cfg.sampling.greedy:
+            next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        else:
+            self._sample_key, sub = jax.random.split(self._sample_key)
+            next_tokens = np.asarray(sample(logits, self.cfg.sampling, sub), np.int32)
+        produced = 0
+        now = time.perf_counter()
+        for (t, s), req in list(self.active.items()):
+            tok = int(next_tokens[t, s])
+            req.generated.append(tok)
+            produced += 1
+            self.slots.set_length(t, s, self.slots.slots[(t, s)].length + 1)
+            self.last_token[t, s] = tok
+            self.monitor.record(t, per_tenant_time.get(t, step_time), req.slo_s)
+            if req.done:
+                req.finish_time = now
+                req.state = RequestState.FINISHED
+                self.finished.append(req)
+                self.slots.release(t, s)
+                del self.active[(t, s)]
+        self.steps += 1
+        self.decode_tokens += produced
+        return produced
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            self.step()
+            if not self.queue and not self.active:
+                return
+        raise RuntimeError("engine did not drain")
+
+    # ------------------------------------------------------------------ metrics
+    def report(self) -> Dict[str, float]:
+        rep = {
+            "steps": float(self.steps),
+            "decode_tokens": float(self.decode_tokens),
+            "finished": float(len(self.finished)),
+            "slot_utilization": self.slots.utilization(),
+        }
+        rep.update(self.monitor.summary())
+        lats = [r.latency_s for r in self.finished if r.latency_s is not None]
+        if lats:
+            rep["req_mean_latency_s"] = float(np.mean(lats))
+            rep["req_p95_latency_s"] = float(np.percentile(lats, 95))
+        return rep

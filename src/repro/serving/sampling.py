@@ -1,0 +1,66 @@
+"""Token sampling: greedy / temperature / top-k / top-p (nucleus).
+
+Pure functions over logits batches; the engine threads a PRNG key per
+step. All samplers are jit-compatible and vmappable over the tenant axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0   # 0 => greedy
+    top_k: int = 0             # 0 => disabled
+    top_p: float = 1.0         # 1 => disabled
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+def apply_top_k(logits: jax.Array, k: int) -> jax.Array:
+    """Mask all but the k highest logits. logits: (..., V)."""
+    if k <= 0:
+        return logits
+    kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
+    return jnp.where(logits < kth, NEG_INF, logits)
+
+
+def apply_top_p(logits: jax.Array, p: float) -> jax.Array:
+    """Nucleus filtering: keep the smallest prefix of sorted probs >= p."""
+    if p >= 1.0:
+        return logits
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep tokens whose cumulative mass (excluding themselves) < p
+    keep_sorted = (cum - probs) < p
+    # threshold = smallest kept logit
+    thresholds = jnp.min(
+        jnp.where(keep_sorted, sorted_logits, jnp.inf), axis=-1, keepdims=True
+    )
+    return jnp.where(logits < thresholds, NEG_INF, logits)
+
+
+def sample(
+    logits: jax.Array,
+    params: SamplingParams,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Sample token ids from (..., V) logits."""
+    if params.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError("non-greedy sampling requires a PRNG key")
+    logits = logits.astype(jnp.float32) / params.temperature
+    logits = apply_top_k(logits, params.top_k)
+    logits = apply_top_p(logits, params.top_p)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,64 @@
+"""Msgpack checkpointing for param/optimizer pytrees (no external deps
+beyond msgpack + numpy, both installed)."""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree: Pytree, step: Optional[int] = None) -> None:
+    leaves, _ = _flatten(tree)
+    payload = {
+        "step": step if step is not None else -1,
+        "leaves": [
+            {
+                "dtype": str(np.asarray(leaf).dtype),
+                "shape": list(np.asarray(leaf).shape),
+                "data": np.ascontiguousarray(
+                    np.asarray(leaf, dtype=_storage_dtype(leaf))
+                ).tobytes(),
+            }
+            for leaf in leaves
+        ],
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def _storage_dtype(leaf) -> np.dtype:
+    dt = np.asarray(leaf).dtype
+    if dt == jnp.bfloat16:
+        return np.dtype(np.float32)  # numpy has no bf16; widen for storage
+    return dt
+
+
+def restore_checkpoint(path: str, like: Pytree) -> Dict[str, Any]:
+    """Restore into the structure (and dtypes) of ``like``."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    like_leaves, treedef = _flatten(like)
+    if len(payload["leaves"]) != len(like_leaves):
+        raise ValueError(
+            f"checkpoint has {len(payload['leaves'])} leaves, expected {len(like_leaves)}"
+        )
+    leaves = []
+    for rec, ref in zip(payload["leaves"], like_leaves):
+        arr = np.frombuffer(rec["data"], dtype=_storage_dtype(ref)).reshape(rec["shape"])
+        leaves.append(jnp.asarray(arr, dtype=np.asarray(ref).dtype))
+    return {"tree": jax.tree.unflatten(treedef, leaves), "step": payload["step"]}

@@ -1,0 +1,96 @@
+"""Train loop: jitted step (optionally pjit-sharded), metrics, checkpoints."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update, lr_schedule
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    step: int = 0
+
+
+def make_train_step(
+    model: Model,
+    *,
+    base_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 1000,
+    weight_decay: float = 0.1,
+) -> Callable:
+    """Builds the pure (params, opt, tokens, labels) -> updated step fn."""
+
+    def train_step(params, opt: AdamWState, tokens, labels):
+        def loss_fn(p):
+            loss, metrics = model.forward_train(p, tokens, labels)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        lr = lr_schedule(opt.step, base_lr, warmup_steps, total_steps)
+        params, opt, opt_metrics = adamw_update(
+            grads, opt, params, lr, weight_decay=weight_decay
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt, metrics
+
+    return train_step
+
+
+def train(
+    model: Model,
+    data: Iterable[Tuple[Any, Any]],
+    *,
+    steps: int,
+    seed: int = 0,
+    base_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    weight_decay: float = 0.1,
+    log_every: int = 10,
+    checkpoint_path: Optional[str] = None,
+    checkpoint_every: int = 100,
+    log_fn: Callable[[str], None] = print,
+) -> TrainState:
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    step_fn = jax.jit(
+        make_train_step(
+            model,
+            base_lr=base_lr,
+            warmup_steps=warmup_steps,
+            total_steps=steps,
+            weight_decay=weight_decay,
+        )
+    )
+
+    t0 = time.perf_counter()
+    it = iter(data)
+    losses: Dict[int, float] = {}
+    for step in range(steps):
+        tokens, labels = next(it)
+        params, opt, metrics = step_fn(params, opt, jnp.asarray(tokens), jnp.asarray(labels))
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            losses[step] = loss
+            dt = time.perf_counter() - t0
+            log_fn(
+                f"step {step:5d}  loss {loss:8.4f}  ce {float(metrics['ce']):8.4f}  "
+                f"grad_norm {float(metrics['grad_norm']):7.3f}  "
+                f"lr {float(metrics['lr']):.2e}  {dt:7.1f}s"
+            )
+        if checkpoint_path and (step + 1) % checkpoint_every == 0:
+            ckpt.save_checkpoint(checkpoint_path, {"params": params, "opt": opt}, step)
+    if checkpoint_path:
+        ckpt.save_checkpoint(checkpoint_path, {"params": params, "opt": opt}, steps - 1)
+    return TrainState(params=params, opt=opt, step=steps)

@@ -1,0 +1,63 @@
+"""Chunked (continuation) prefill: processing a prompt in chunks with
+state carry must equal single-shot prefill — for attention caches (linear),
+Mamba2 conv+SSM state, RWKV wkv+shift state, and MoE routing."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config, smoke_variant
+from repro.models import build_model
+
+ARCHS = ["stablelm-1.6b", "rwkv6-1.6b", "zamba2-7b", "granite-moe-1b-a400m"]
+
+
+def _setup(arch, rng_key):
+    cfg = dataclasses.replace(smoke_variant(get_config(arch)), dtype="float32")
+    m = build_model(cfg)
+    return cfg, m, m.init(rng_key)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("splits", [[(0, 10), (10, 18), (18, 24)], [(0, 1), (1, 24)]],
+                         ids=["3chunks", "tiny_first"])
+def test_chunked_equals_single(arch, splits, rng_key):
+    cfg, m, params = _setup(arch, rng_key)
+    B, S = 2, 24
+    toks = jax.random.randint(rng_key, (B, S), 0, cfg.vocab_size)
+    want_logits, want_caches = m.forward_prefill(params, toks, cache_len=S + 4)
+
+    caches = None
+    logits = None
+    for a, b in splits:
+        if caches is None:
+            logits, caches = m.forward_prefill(params, toks[:, a:b], cache_len=S + 4)
+        else:
+            logits, caches = m.forward_prefill(
+                params, toks[:, a:b], cache_len=S + 4,
+                caches=caches, start=jnp.int32(a),
+            )
+    scale = max(float(jnp.max(jnp.abs(want_logits))), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(logits) / scale, np.asarray(want_logits) / scale, atol=3e-4
+    )
+    # the carried caches must also support identical decode
+    tok = jnp.argmax(want_logits, -1).astype(jnp.int32)
+    lens = jnp.full((B,), S, jnp.int32)
+    l1, _ = m.forward_decode(params, tok, caches, lens)
+    l2, _ = m.forward_decode(params, tok, want_caches, lens)
+    np.testing.assert_allclose(
+        np.asarray(l1) / scale, np.asarray(l2) / scale, atol=3e-4
+    )
+
+
+def test_sliding_window_rejects_continuation(rng_key):
+    cfg, m, params = _setup("gemma3-27b", rng_key)
+    toks = jax.random.randint(rng_key, (1, 8), 0, cfg.vocab_size)
+    _, caches = m.forward_prefill(params, toks, cache_len=32)
+    with pytest.raises(NotImplementedError):
+        m.forward_prefill(params, toks, cache_len=32, caches=caches, start=jnp.int32(8))

@@ -1,0 +1,86 @@
+"""flash_attention / decode_attention / chunked-ref vs the dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+
+CASES = [
+    # B, Hq, Hkv, S, D
+    (2, 4, 4, 128, 64),      # MHA
+    (2, 8, 2, 160, 64),      # GQA 4:1, ragged S
+    (1, 8, 1, 96, 32),       # MQA
+    (2, 4, 2, 64, 128),      # wide head
+]
+
+
+@pytest.mark.parametrize("case", CASES, ids=str)
+@pytest.mark.parametrize("window", [0, 32])
+def test_flash_vs_dense(case, window, rng_key):
+    B, Hq, Hkv, S, D = case
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window, bq=64, bkv=64, interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_chunked_ref_vs_dense(rng_key):
+    """The O(S) XLA fallback must equal the dense reference (incl. softcap)."""
+    B, Hq, Hkv, S, D = 2, 4, 2, 200, 32
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    for window, cap in [(0, 0.0), (64, 0.0), (0, 30.0)]:
+        got = ref.attention_chunked(q, k, v, causal=True, window=window,
+                                    logit_softcap=cap, kv_chunk=64)
+        want = ref.attention(q, k, v, causal=True, window=window, logit_softcap=cap)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_suffix_queries(rng_key):
+    """Sq < Skv (queries are the suffix) must align causally."""
+    B, Hq, Hkv, Skv, Sq, D = 1, 2, 2, 96, 32, 32
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, Skv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, Skv, D), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, bq=32, bkv=32, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("lengths", [[300, 17, 128], [1, 1, 1], [256, 256, 256]], ids=str)
+def test_decode_vs_dense(lengths, rng_key):
+    B, Hq, Hkv, S, D = 3, 8, 2, 300, 64
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    lens = jnp.asarray(lengths, jnp.int32)
+    got = decode_attention(q, kc, vc, lens, bkv=128, interpret=True)
+    want = ref.decode_attention(q, kc, vc, lens)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_decode_ignores_stale_cache(rng_key):
+    """Cache positions beyond `lengths` must not affect the output —
+    the property slot-reuse in the serving engine relies on."""
+    B, Hq, Hkv, S, D = 1, 2, 1, 64, 32
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    lens = jnp.asarray([20], jnp.int32)
+    out1 = decode_attention(q, kc, vc, lens, bkv=32, interpret=True)
+    kc2 = kc.at[:, :, 20:].set(99.0)
+    vc2 = vc.at[:, :, 20:].set(-99.0)
+    out2 = decode_attention(q, kc2, vc2, lens, bkv=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))

@@ -1,0 +1,65 @@
+"""Sampling module: greedy/temperature/top-k/top-p properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.sampling import SamplingParams, apply_top_k, apply_top_p, sample
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def test_greedy_matches_argmax(rng_key):
+    logits = jax.random.normal(rng_key, (4, 100))
+    got = sample(logits, SamplingParams(temperature=0.0))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_top_k_masks_everything_else(rng_key):
+    logits = jax.random.normal(rng_key, (3, 50))
+    masked = apply_top_k(logits, 5)
+    n_alive = np.sum(np.asarray(masked) > -1e29, axis=-1)
+    np.testing.assert_array_equal(n_alive, [5, 5, 5])
+    # surviving entries are exactly the 5 largest
+    for row, mrow in zip(np.asarray(logits), np.asarray(masked)):
+        top5 = set(np.argsort(row)[-5:])
+        assert set(np.where(mrow > -1e29)[0]) == top5
+
+
+def test_top_p_keeps_nucleus(rng_key):
+    logits = jnp.asarray([[10.0, 9.0, 0.0, -5.0, -5.0]])
+    masked = apply_top_p(logits, 0.9)
+    alive = np.where(np.asarray(masked[0]) > -1e29)[0]
+    assert set(alive) == {0, 1}  # two dominant tokens carry >0.9 mass
+
+
+def test_top_p_one_is_noop(rng_key):
+    logits = jax.random.normal(rng_key, (2, 20))
+    np.testing.assert_array_equal(np.asarray(apply_top_p(logits, 1.0)), np.asarray(logits))
+
+
+@given(k=st.integers(1, 20), seed=st.integers(0, 5))
+def test_sampled_token_always_in_top_k(k, seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (2, 20))
+    tok = sample(logits, SamplingParams(temperature=1.0, top_k=k),
+                 jax.random.fold_in(key, 1))
+    for row, t in zip(np.asarray(logits), np.asarray(tok)):
+        assert t in set(np.argsort(row)[-k:])
+
+
+def test_temperature_sharpens(rng_key):
+    """At tiny temperature, sampling converges to greedy."""
+    logits = jax.random.normal(rng_key, (8, 30))
+    tok = sample(logits, SamplingParams(temperature=1e-4),
+                 jax.random.fold_in(rng_key, 2))
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_nongreedy_requires_key(rng_key):
+    logits = jax.random.normal(rng_key, (1, 10))
+    with pytest.raises(ValueError):
+        sample(logits, SamplingParams(temperature=1.0), key=None)

@@ -1,0 +1,101 @@
+"""Hypothesis property-based tests for the scheduler's invariants.
+
+The central invariant (what makes space-time batching SAFE): merging any
+set of same-shape kernels from any tenants into super-kernels, in any
+arrival order, under any window/max-size knobs, produces EXACTLY the same
+per-tenant results as sequential per-tenant execution.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ScheduleConfig
+from repro.core import DynamicSpaceTimeScheduler, GemmProblem
+from repro.core.superkernel import SuperKernelCache, _round_pow2
+from repro.core.tenancy import stack_params, unstack_params
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _problems(n, m, k, nn, seed):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for t in range(n):
+        kx, kw, key = jax.random.split(key, 3)
+        out.append(
+            GemmProblem(
+                tenant_id=t,
+                x=jax.random.normal(kx, (m, k), jnp.float32),
+                w=jax.random.normal(kw, (k, nn), jnp.float32),
+            )
+        )
+    return out
+
+
+@given(
+    n=st.integers(1, 17),
+    m=st.sampled_from([8, 32, 96]),
+    k=st.sampled_from([16, 48]),
+    nn=st.sampled_from([1, 8, 40]),
+    max_sk=st.integers(1, 8),
+    bucketing=st.sampled_from(["pow2", "exact"]),
+    seed=st.integers(0, 10),
+)
+def test_batched_equals_sequential(n, m, k, nn, max_sk, bucketing, seed):
+    sched = DynamicSpaceTimeScheduler(
+        ScheduleConfig(batching_window_s=0.0, max_superkernel_size=max_sk,
+                       r_bucketing=bucketing)
+    )
+    ps = _problems(n, m, k, nn, seed)
+    for p in ps:
+        sched.submit(p)
+    done = sched.flush()
+    assert len(done) == n
+    assert sorted(p.tenant_id for p in done) == list(range(n))
+    for p in done:
+        np.testing.assert_allclose(
+            np.asarray(p.result), np.asarray(p.x @ p.w), rtol=1e-4, atol=1e-3
+        )
+
+
+@given(n=st.integers(1, 2049))
+def test_pow2_rounding(n):
+    r = _round_pow2(n)
+    assert r >= n and r < 2 * n and (r & (r - 1)) == 0
+
+
+@given(
+    n=st.integers(1, 6),
+    seed=st.integers(0, 5),
+    evict=st.integers(0, 5),
+)
+def test_stack_unstack_roundtrip(n, seed, evict):
+    key = jax.random.PRNGKey(seed)
+    trees = []
+    for t in range(n):
+        k1, k2, key = jax.random.split(key, 3)
+        trees.append({"a": jax.random.normal(k1, (4, 3)), "b": {"c": jax.random.normal(k2, (2,))}})
+    stacked = stack_params(trees)
+    back = unstack_params(stacked, n)
+    for orig, rec in zip(trees, back):
+        for lo, lr in zip(jax.tree.leaves(orig), jax.tree.leaves(rec)):
+            np.testing.assert_array_equal(np.asarray(lo), np.asarray(lr))
+
+
+@given(
+    groups=st.lists(st.integers(0, 200), min_size=1, max_size=6),
+    bm=st.sampled_from([8, 32, 128]),
+)
+def test_group_layout_properties(groups, bm):
+    from repro.kernels.grouped_gemm import make_group_layout
+
+    offs, bgroups, T = make_group_layout(np.array(groups), bm=bm)
+    assert T % bm == 0
+    assert len(bgroups) == T // bm
+    # each group's padded extent covers its rows and block ids are ordered
+    assert list(bgroups) == sorted(bgroups)
+    for g, sz in enumerate(groups):
+        assert offs[g + 1] - offs[g] >= sz

@@ -1,0 +1,109 @@
+"""Sharding rule tables + constraints: pure-python properties (no big mesh
+needed — a 2x2 host mesh via 4 fake devices is enough to exercise the rules,
+but those require a separate process; here we test the pure spec logic and
+no-op behavior of constraints without a mesh)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.constraints import active_mesh, constrain, use_mesh
+from repro.launch.roofline import (
+    RooflineReport,
+    analytic_cost,
+    collective_bytes,
+    model_flops_for,
+)
+from repro.config import get_config, get_shape
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+class FakeMeshShape(dict):
+    pass
+
+
+def test_constrain_noop_without_mesh():
+    assert active_mesh() is None
+    x = jnp.ones((4, 8))
+    y = constrain(x, "batch", "model")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_constrain_rank_mismatch_raises():
+    class M:  # minimal mesh stand-in
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 2}
+
+    with use_mesh(M()):
+        with pytest.raises(ValueError):
+            constrain(jnp.ones((4, 8)), "batch")
+
+
+def test_collective_bytes_parsing():
+    hlo = """
+  %all-gather.22 = f32[256,4096,2048]{1,0,2} all-gather(%x), replica_groups=[16,16]<=[16,16]
+  %ar = bf16[1024]{0} all-reduce(%y), to_apply=%add
+  %rs.1 = (f32[64,64]{1,0}, f32[32]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %ag-start = f32[128]{0} all-gather-start(%c)
+  %ag-done = f32[128]{0} all-gather-done(%ag-start)
+  %p = f32[2,2]{1,0} add(%q, %r)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 256 * 4096 * 2048 * 4 + 128 * 4
+    assert out["all-reduce"] == 1024 * 2
+    assert out["reduce-scatter"] == 64 * 64 * 4 + 32 * 4
+    assert out["collective-permute"] == 0
+
+
+def test_roofline_report_bottleneck():
+    rep = RooflineReport(
+        arch="x", shape="train_4k", mesh="pod1", chips=256,
+        hlo_flops=0, hlo_bytes=0,
+        coll_bytes={"all-gather": 50_000_000_000, "all-reduce": 0,
+                    "reduce-scatter": 0, "all-to-all": 0, "collective-permute": 0},
+        model_flops=1e16, analytic_flops=1.3e16, analytic_bytes=1e12,
+    )
+    assert rep.t_collective == pytest.approx(1.0)  # 50GB / 50GB/s
+    assert rep.bottleneck == "collective"
+    assert 0 < rep.useful_flops_ratio < 1
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "granite-moe-1b-a400m", "rwkv6-1.6b"])
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_analytic_cost_sane(arch, shape):
+    cfg = get_config(arch)
+    shp = get_shape(shape)
+    cost = analytic_cost(cfg, shp)
+    mf = model_flops_for(cfg, shp)
+    assert cost["flops"] > 0 and cost["hbm_bytes"] > 0
+    # analytic FLOPs must be >= the 6ND/2ND floor and within ~3x of it
+    assert cost["flops"] >= mf * 0.9
+    assert cost["flops"] < mf * 5
+
+
+@given(
+    dims=st.lists(st.sampled_from([1, 3, 16, 48, 160, 4096]), min_size=1, max_size=4),
+)
+def test_choose_spec_divisibility(dims):
+    """choose_spec must never assign an axis to a non-divisible dim.
+
+    Uses a real 1-device mesh reshaped logically — we only exercise the
+    pure assignment logic so mesh sizes come from a stub."""
+    from repro.distributed.sharding import choose_spec
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    spec = choose_spec(dims, M())
+    for d, axis in enumerate(spec):
+        if axis is not None:
+            assert dims[d] % 16 == 0
+    # each axis used at most once
+    used = [a for a in spec if a is not None]
+    assert len(used) == len(set(used))
