@@ -50,7 +50,8 @@ def main() -> None:
     if want("fig5"):
         fig5_replicas.run(csv_rows=csv_rows)
     if want("trace"):
-        dynamic_trace.run(num_events=80 if args.quick else 200, csv_rows=csv_rows)
+        dynamic_trace.run_all_policies(
+            num_events=80 if args.quick else 200, csv_rows=csv_rows)
     if want("roofline"):
         roofline_report.run(csv_rows=csv_rows)
         roofline_report.run(mesh="pod2", csv_rows=csv_rows)

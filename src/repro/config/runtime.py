@@ -42,8 +42,19 @@ class ScheduleConfig:
     """Dynamic space-time scheduler knobs (paper section 4)."""
 
     # batching window: how long the scheduler waits to accumulate matching
-    # kernels before dispatching a super-kernel (seconds, host clock).
+    # workloads before dispatching a super-kernel (seconds, injected clock).
     batching_window_s: float = 0.002
+    # window policy: "fixed" holds every bucket the full window; the
+    # "slo_adaptive" policy shrinks a bucket's window as any pending
+    # item's slack to its SLO deadline shrinks (D-STACK-style).
+    batching_policy: str = "fixed"  # "fixed" | "slo_adaptive"
+    # slo_adaptive knobs: floor of the shrunken window, and the fraction
+    # of remaining slack a bucket may keep waiting.
+    min_batching_window_s: float = 0.0
+    slo_slack_fraction: float = 0.25
+    # admission control: reject submits once a tenant has this many
+    # pending workloads queued (None = unbounded).
+    max_pending_per_tenant: Optional[int] = None
     # maximum problems merged into one super-kernel invocation.
     max_superkernel_size: int = 128
     # R is padded up to the next bucket to bound the number of compiled

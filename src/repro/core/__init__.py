@@ -1,17 +1,38 @@
-"""The paper's primary contribution: dynamic space-time kernel scheduling.
+"""The paper's primary contribution: dynamic space-time scheduling,
+unified behind one execution core.
 
-Components (paper section 4):
-    queue        -- shape-bucketed kernel arrival queue
+Every layer submits generic ``Workload`` items (shape-bucket key, cost,
+tenant, SLO, execute-callback) through the same scheduler — single GEMMs
+at the kernel layer, prefill/decode cohorts at the serving layer.
+
+Components (paper section 4 + the unifying refactor):
+    workload     -- the generic schedulable item (the common currency)
+    clock        -- injectable time sources (wall / deterministic virtual)
+    policy       -- pluggable batching windows (fixed / SLO-adaptive)
+    queue        -- bucketed workload arrival queue
     superkernel  -- inter-model batched super-kernel builder + compile cache
     strategies   -- the four multiplexing strategies under comparison
                     (exclusive / time-only / space-only / space-time)
-    scheduler    -- DynamicSpaceTimeScheduler: batching window, SLO-aware
-                    dispatch, straggler eviction
+    scheduler    -- DynamicSpaceTimeScheduler: admission control, batching
+                    window policy, SLO tracking, straggler eviction
     tenancy      -- multi-tenant model/weight store (stacked pytrees)
     slo          -- per-tenant latency EWMA + predictability metrics
 """
 
-from repro.core.queue import GemmProblem, KernelQueue, ShapeBucket  # noqa: F401
+from repro.core.clock import Clock, VirtualClock, WallClock  # noqa: F401
+from repro.core.policy import (  # noqa: F401
+    BatchingPolicy,
+    FixedWindowPolicy,
+    SLOAdaptiveWindowPolicy,
+    make_policy,
+)
+from repro.core.queue import (  # noqa: F401
+    GemmProblem,
+    KernelQueue,
+    ShapeBucket,
+    WorkQueue,
+)
 from repro.core.scheduler import DynamicSpaceTimeScheduler  # noqa: F401
 from repro.core.superkernel import SuperKernelCache  # noqa: F401
 from repro.core.tenancy import TenantManager, stack_params, unstack_params  # noqa: F401
+from repro.core.workload import Workload  # noqa: F401

@@ -1,0 +1,93 @@
+"""Pluggable batching-window policies for the unified scheduler.
+
+The batching window is the space-time trade-off knob: wait longer and
+more work merges into one super-kernel (throughput), wait shorter and
+each item sees less queueing delay (latency). The paper uses a fixed
+window; D-STACK-style SLO-aware scheduling shrinks the window as a
+tenant's slack to its deadline shrinks, so a bucket holding a nearly-late
+item dispatches immediately while relaxed buckets keep accumulating.
+
+A policy answers one question: given the pending items of one bucket and
+the current (injected) time, how long may the oldest item keep waiting?
+The scheduler combines that with its size cap (a full bucket is always
+ripe).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.config import ScheduleConfig
+
+
+class BatchingPolicy:
+    """Decides when a bucket of pending workloads is ripe to dispatch."""
+
+    name: str = "base"
+    # True if window_s inspects every pending item (the scheduler then
+    # materializes the bucket's pending list; False keeps ripeness O(1)).
+    needs_pending: bool = False
+
+    def window_s(self, pending: Sequence, now: float) -> float:
+        """Max time the oldest pending item may keep waiting (seconds).
+
+        The scheduler's ``_ripe`` combines this with its size cap (a full
+        bucket is always ripe) and the bucket's oldest arrival.
+        """
+        raise NotImplementedError
+
+
+class FixedWindowPolicy(BatchingPolicy):
+    """The paper's policy: one constant accumulation window."""
+
+    name = "fixed"
+
+    def __init__(self, window_s: float):
+        self._window_s = window_s
+
+    def window_s(self, pending: Sequence, now: float) -> float:
+        return self._window_s
+
+
+class SLOAdaptiveWindowPolicy(BatchingPolicy):
+    """Window shrinks as any pending item's slack to its SLO shrinks.
+
+    Each item's slack is ``(arrival + slo) - now``. The bucket's window is
+    the most urgent item's ``clamp(slack * slack_fraction, min_window,
+    base_window)`` — an item at (or past) its deadline forces immediate
+    dispatch, an item with lots of slack waits the full base window and
+    merges with more peers.
+    """
+
+    name = "slo_adaptive"
+    needs_pending = True
+
+    def __init__(
+        self,
+        base_window_s: float,
+        min_window_s: float = 0.0,
+        slack_fraction: float = 0.25,
+    ):
+        self.base_window_s = base_window_s
+        self.min_window_s = min_window_s
+        self.slack_fraction = slack_fraction
+
+    def window_s(self, pending: Sequence, now: float) -> float:
+        w = self.base_window_s
+        for item in pending:
+            slack = (item.arrival_time + item.slo_s) - now
+            w = min(w, max(self.min_window_s, slack * self.slack_fraction))
+        return w
+
+
+def make_policy(schedule: ScheduleConfig) -> BatchingPolicy:
+    """Instantiate the policy named by ``schedule.batching_policy``."""
+    if schedule.batching_policy == "fixed":
+        return FixedWindowPolicy(schedule.batching_window_s)
+    if schedule.batching_policy == "slo_adaptive":
+        return SLOAdaptiveWindowPolicy(
+            schedule.batching_window_s,
+            schedule.min_batching_window_s,
+            schedule.slo_slack_fraction,
+        )
+    raise ValueError(f"unknown batching policy: {schedule.batching_policy!r}")

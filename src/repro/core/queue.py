@@ -1,9 +1,12 @@
-"""Shape-bucketed kernel arrival queue.
+"""Shape-bucketed workload arrival queue.
 
 Interactive inference queries arrive stochastically; each query decomposes
-into a stream of kernel launches (mostly GEMMs). The queue groups pending
-kernels by *shape bucket* — problems in the same bucket are mergeable into
-one super-kernel. This mirrors the paper's dynamic scheduler front-end.
+into schedulable workloads — kernel launches (mostly GEMMs) at the bottom
+layer, prefill/decode cohorts at the serving layer. The queue groups
+pending workloads by their *bucket* (any hashable mergeability key —
+``ShapeBucket`` for GEMMs, tuples for engine cohorts); items in the same
+bucket are mergeable into one super-dispatch. This is the front-end of the
+unified space-time scheduler.
 """
 
 from __future__ import annotations
@@ -11,14 +14,14 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, Hashable, List, Optional, Tuple
 
 import jax
 
 
 @dataclasses.dataclass(frozen=True)
 class ShapeBucket:
-    """Super-kernel mergeability key."""
+    """Super-kernel mergeability key for GEMM-shaped workloads."""
 
     op: str                       # "gemm" (others pluggable)
     M: int
@@ -38,7 +41,15 @@ _seq = itertools.count()
 
 @dataclasses.dataclass
 class GemmProblem:
-    """One pending kernel from one tenant's model."""
+    """One pending GEMM from one tenant's model.
+
+    Satisfies the ``Workload`` protocol (see ``core.workload``): ``bucket``
+    / ``cost`` / ``merge_family`` are derived from the operand shapes, and
+    its executor is the scheduler's built-in ``SuperKernelCache`` (it
+    carries no ``execute`` callback).
+    """
+
+    kind = "kernel"               # monitor latency class (not a field)
 
     tenant_id: int
     x: jax.Array                  # (M, K) activation
@@ -55,44 +66,76 @@ class GemmProblem:
         return ShapeBucket.for_gemm(self.x, self.w)
 
     @property
+    def merge_family(self) -> Tuple:
+        """GEMMs sharing (op, K, N, dtype) may ragged-merge across M."""
+        b = self.bucket
+        return (b.op, b.K, b.N, b.dtype)
+
+    @property
     def flops(self) -> int:
         M, K = self.x.shape
         N = self.w.shape[1]
         return 2 * M * K * N
 
+    @property
+    def cost(self) -> float:
+        return float(self.flops)
 
-class KernelQueue:
-    """FIFO-per-bucket pending-kernel store."""
+
+class WorkQueue:
+    """FIFO-per-bucket pending-workload store with per-tenant accounting."""
 
     def __init__(self) -> None:
-        self._buckets: Dict[ShapeBucket, Deque[GemmProblem]] = collections.defaultdict(
+        self._buckets: Dict[Hashable, Deque] = collections.defaultdict(
             collections.deque
         )
+        self._per_tenant: Dict[int, int] = collections.defaultdict(int)
 
-    def push(self, problem: GemmProblem) -> None:
-        self._buckets[problem.bucket].append(problem)
+    def push(self, item) -> None:
+        self._buckets[item.bucket].append(item)
+        self._per_tenant[item.tenant_id] += 1
 
     def __len__(self) -> int:
         return sum(len(q) for q in self._buckets.values())
 
-    def buckets(self) -> List[Tuple[ShapeBucket, int]]:
+    def pending_for_tenant(self, tenant_id: int) -> int:
+        return self._per_tenant.get(tenant_id, 0)
+
+    def buckets(self) -> List[Tuple[Hashable, int]]:
         return [(b, len(q)) for b, q in self._buckets.items() if q]
 
-    def oldest_arrival(self, bucket: ShapeBucket) -> Optional[float]:
+    def peek(self, bucket: Hashable) -> List:
+        """Pending items of one bucket, FIFO order, without popping."""
+        return list(self._buckets.get(bucket, ()))
+
+    def head(self, bucket: Hashable):
+        """Oldest pending item of a bucket (None if empty), O(1)."""
+        q = self._buckets.get(bucket)
+        return q[0] if q else None
+
+    def oldest_arrival(self, bucket: Hashable) -> Optional[float]:
         q = self._buckets.get(bucket)
         return q[0].arrival_time if q else None
 
-    def pop_batch(self, bucket: ShapeBucket, max_n: int) -> List[GemmProblem]:
-        """Pop up to max_n problems from a bucket, FIFO order."""
+    def pop_batch(self, bucket: Hashable, max_n: int) -> List:
+        """Pop up to max_n items from a bucket, FIFO order."""
         q = self._buckets[bucket]
         out = []
         while q and len(out) < max_n:
-            out.append(q.popleft())
+            item = q.popleft()
+            self._per_tenant[item.tenant_id] -= 1
+            out.append(item)
         return out
 
-    def drain(self) -> List[GemmProblem]:
+    def drain(self) -> List:
         out = []
         for q in self._buckets.values():
             out.extend(q)
             q.clear()
+        self._per_tenant.clear()
         return out
+
+
+# Backwards-compatible alias: the queue predates the generic Workload
+# refactor and most call sites still say "kernel queue".
+KernelQueue = WorkQueue

@@ -1,32 +1,39 @@
-"""DynamicSpaceTimeScheduler — the paper's proposed scheduler (section 4).
+"""DynamicSpaceTimeScheduler — the unified space-time execution core.
 
 Queries arrive stochastically, so super-kernels cannot be precomputed
-ahead-of-time. The scheduler:
+ahead-of-time. The scheduler operates on the generic ``Workload``
+protocol (see ``core.workload``) — kernel-level GEMMs and request-level
+prefill/decode cohorts flow through the SAME policy core:
 
-  1. enqueues arriving kernels into shape buckets (``KernelQueue``);
-  2. waits up to ``batching_window_s`` for more mergeable arrivals (the
-     space-time trade-off knob: window=0 degrades toward per-kernel
-     dispatch, window=inf degrades toward offline batching);
-  3. dispatches each ripe bucket as ONE super-kernel through the compile
-     cache (``SuperKernelCache``), bounded by ``max_superkernel_size``;
-  4. records per-tenant latency, detects stragglers, and evicts them
-     (``LatencyMonitor`` + caller-provided eviction hook).
+  1. ``submit`` stamps arrivals with the injected ``Clock`` and applies
+     admission control (per-tenant pending caps);
+  2. a pluggable ``BatchingPolicy`` decides when each shape bucket is
+     ripe — the fixed window of the paper, or an SLO-adaptive window
+     that shrinks as a tenant's slack to its deadline shrinks;
+  3. ``pump`` dispatches each ripe bucket as ONE super-dispatch: items
+     carrying an ``execute`` callback run it over the merged batch;
+     bare GEMM problems route through the compile cache
+     (``SuperKernelCache``), bounded by ``max_superkernel_size``;
+  4. per-tenant latency is recorded against the same clock, stragglers
+     are detected and evicted (``LatencyMonitor`` + caller hook).
 
 The pump is synchronous and host-driven — the paper's scheduler is also a
-software scheduler above the accelerator; determinism here is what makes
-the property-based tests (batched == sequential) possible.
+software scheduler above the accelerator. All policy decisions read time
+only through ``self.clock`` (no hidden ``time.perf_counter()``), so a
+``VirtualClock`` plus a ``cost_model`` turns the pump into a fully
+deterministic simulator: the property-based tests and the Fig-4
+fixed-vs-adaptive comparison both rely on that.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Dict, List, Optional
-
-import jax
+from typing import Callable, Dict, Hashable, List, Optional, Sequence
 
 from repro.config import ScheduleConfig
-from repro.core.queue import GemmProblem, KernelQueue, ShapeBucket
+from repro.core.clock import Clock, WallClock
+from repro.core.policy import BatchingPolicy, make_policy
+from repro.core.queue import WorkQueue
 from repro.core.slo import LatencyMonitor
 from repro.core.superkernel import SuperKernelCache
 
@@ -35,14 +42,20 @@ from repro.core.superkernel import SuperKernelCache
 class SchedulerStats:
     dispatches: int = 0
     problems_completed: int = 0
-    total_flops: int = 0
+    total_cost: float = 0.0
     busy_time_s: float = 0.0
+    rejected: int = 0
+
+    @property
+    def total_flops(self) -> float:
+        """Alias: for GEMM workloads ``cost`` is exactly FLOPs."""
+        return self.total_cost
 
     @property
     def achieved_tflops(self) -> float:
         if self.busy_time_s == 0.0:
             return 0.0
-        return self.total_flops / self.busy_time_s / 1e12
+        return self.total_cost / self.busy_time_s / 1e12
 
 
 class DynamicSpaceTimeScheduler:
@@ -50,9 +63,17 @@ class DynamicSpaceTimeScheduler:
         self,
         schedule: Optional[ScheduleConfig] = None,
         on_evict: Optional[Callable[[int], None]] = None,
+        clock: Optional[Clock] = None,
+        policy: Optional[BatchingPolicy] = None,
+        cost_model: Optional[Callable[[Sequence], float]] = None,
     ):
         self.schedule = schedule or ScheduleConfig()
-        self.queue = KernelQueue()
+        self.clock = clock or WallClock()
+        self.policy = policy or make_policy(self.schedule)
+        # Maps a dispatched batch to modeled seconds; a VirtualClock then
+        # advances by it, making completion times deterministic.
+        self.cost_model = cost_model
+        self.queue = WorkQueue()
         self.cache = SuperKernelCache(self.schedule)
         self.monitor = LatencyMonitor(
             self.schedule.latency_ewma_alpha,
@@ -63,49 +84,69 @@ class DynamicSpaceTimeScheduler:
         self.evicted: List[int] = []
 
     # ---------------------------------------------------------------- intake
-    def submit(self, problem: GemmProblem, now: Optional[float] = None) -> None:
-        problem.arrival_time = now if now is not None else time.perf_counter()
-        self.queue.push(problem)
+    def submit(self, item, now: Optional[float] = None) -> bool:
+        """Admit one workload; returns False if admission control rejects.
+
+        ``item`` is anything satisfying the Workload protocol (a
+        ``Workload``, a ``GemmProblem``, ...).
+        """
+        cap = self.schedule.max_pending_per_tenant
+        if cap is not None and self.queue.pending_for_tenant(item.tenant_id) >= cap:
+            self.stats.rejected += 1
+            return False
+        item.arrival_time = now if now is not None else self.clock.now()
+        self.queue.push(item)
+        return True
 
     # ---------------------------------------------------------------- dispatch
-    def _ripe(self, bucket: ShapeBucket, count: int, now: float) -> bool:
+    def _ripe(self, bucket: Hashable, count: int, now: float) -> bool:
         if count >= self.schedule.max_superkernel_size:
             return True
         oldest = self.queue.oldest_arrival(bucket)
-        return oldest is not None and (now - oldest) >= self.schedule.batching_window_s
+        if oldest is None:
+            return False
+        # only slack-aware policies need the full pending list (O(n));
+        # the fixed window stays O(1) per bucket per tick.
+        pending = self.queue.peek(bucket) if self.policy.needs_pending else ()
+        return (now - oldest) >= self.policy.window_s(pending, now)
 
-    def pump(self, now: Optional[float] = None, force: bool = False) -> List[GemmProblem]:
-        """Dispatch every ripe bucket; returns completed problems.
+    def pump(self, now: Optional[float] = None, force: bool = False) -> List:
+        """Dispatch every ripe bucket; returns completed workloads.
 
-        With ``allow_ragged_merge`` (beyond-paper, MAGMA-vbatched analogue),
-        ripe buckets sharing (op, K, N, dtype) but differing in M are merged
-        into ONE grouped super-kernel instead of one uniform super-kernel
-        per exact shape.
+        With ``allow_ragged_merge`` (beyond-paper, MAGMA-vbatched
+        analogue), ripe buckets sharing a non-None ``merge_family`` are
+        merged into ONE grouped super-kernel instead of one uniform
+        super-kernel per exact shape.
         """
-        now = now if now is not None else time.perf_counter()
-        completed: List[GemmProblem] = []
+        now = now if now is not None else self.clock.now()
+        completed: List = []
 
         if self.schedule.allow_ragged_merge:
-            families: Dict[tuple, List] = {}
+            families: Dict[Hashable, List] = {}
             for bucket, count in self.queue.buckets():
                 if not force and not self._ripe(bucket, count, now):
                     continue
-                families.setdefault(
-                    (bucket.op, bucket.K, bucket.N, bucket.dtype), []
-                ).append(bucket)
+                fam = getattr(self.queue.head(bucket), "merge_family", None)
+                # items without a family only merge within their own bucket
+                key = fam if fam is not None else ("__solo__", bucket)
+                families.setdefault(key, []).append(bucket)
             for fam_buckets in families.values():
-                batch: List[GemmProblem] = []
-                for b in fam_buckets:
-                    batch.extend(
-                        self.queue.pop_batch(
-                            b, self.schedule.max_superkernel_size - len(batch)
+                while True:  # families over the size cap drain fully too
+                    batch: List = []
+                    for b in fam_buckets:
+                        batch.extend(
+                            self.queue.pop_batch(
+                                b, self.schedule.max_superkernel_size - len(batch)
+                            )
                         )
-                    )
-                    if len(batch) >= self.schedule.max_superkernel_size:
+                        if len(batch) >= self.schedule.max_superkernel_size:
+                            break
+                    if not batch:
                         break
-                if batch:
-                    ragged = len({p.x.shape[0] for p in batch}) > 1
+                    ragged = len({p.x.shape[0] for p in batch if hasattr(p, "x")}) > 1
                     completed.extend(self._dispatch(batch, ragged=ragged))
+                    if len(batch) < self.schedule.max_superkernel_size:
+                        break
             return completed
 
         for bucket, count in self.queue.buckets():
@@ -120,27 +161,40 @@ class DynamicSpaceTimeScheduler:
                     break
         return completed
 
-    def flush(self) -> List[GemmProblem]:
-        """Force-dispatch everything pending (end-of-benchmark drain)."""
+    def flush(self) -> List:
+        """Force-dispatch everything pending (end-of-step/benchmark drain)."""
         return self.pump(force=True)
 
-    def _dispatch(
-        self, batch: List[GemmProblem], ragged: bool = False
-    ) -> List[GemmProblem]:
-        t0 = time.perf_counter()
-        outs = self.cache.execute_ragged(batch) if ragged else self.cache.execute(batch)
-        t1 = time.perf_counter()
+    def _execute(self, batch: List, ragged: bool) -> List:
+        """One super-dispatch: callback workloads run their own merged
+        executor; bare GEMMs route through the compile cache."""
+        execute = getattr(batch[0], "execute", None)
+        if execute is not None:
+            return execute(batch)
+        if ragged:
+            return self.cache.execute_ragged(batch)
+        return self.cache.execute(batch)
+
+    def _dispatch(self, batch: List, ragged: bool = False) -> List:
+        t0 = self.clock.now()
+        outs = self._execute(batch, ragged)
+        if self.cost_model is not None:
+            self.clock.advance(self.cost_model(batch))
+        t1 = self.clock.now()
 
         self.stats.dispatches += 1
         self.stats.problems_completed += len(batch)
-        self.stats.total_flops += sum(p.flops for p in batch)
+        self.stats.total_cost += sum(float(getattr(p, "cost", 0.0)) for p in batch)
         self.stats.busy_time_s += t1 - t0
 
         for p, out in zip(batch, outs):
             p.result = out
             p.completion_time = t1
             latency = t1 - p.arrival_time
-            self.monitor.record(p.tenant_id, latency, p.slo_s)
+            self.monitor.record(
+                p.tenant_id, latency, p.slo_s,
+                kind=getattr(p, "kind", "default"),
+            )
 
         self._evict_stragglers()
         return batch
@@ -159,6 +213,7 @@ class DynamicSpaceTimeScheduler:
         rep = {
             "dispatches": float(self.stats.dispatches),
             "problems": float(self.stats.problems_completed),
+            "rejected": float(self.stats.rejected),
             "achieved_tflops": self.stats.achieved_tflops,
             "cache_hit_rate": self.cache.stats.hit_rate,
             "evicted_tenants": float(len(self.evicted)),

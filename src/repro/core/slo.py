@@ -7,9 +7,10 @@ resources between tenants on-the-fly." (paper section 4)
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import statistics
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -37,19 +38,49 @@ class TenantLatency:
         idx = min(len(h) - 1, int(q * len(h)))
         return h[idx]
 
+    @property
+    def attainment(self) -> float:
+        """Fraction of recorded latencies that met their SLO."""
+        if self.count == 0:
+            return 1.0
+        return 1.0 - self.slo_violations / self.count
+
 
 class LatencyMonitor:
-    """Cohort-level latency bookkeeping + straggler detection."""
+    """Cohort-level latency bookkeeping + straggler detection.
+
+    With every workload flowing through the unified scheduler, one
+    monitor sees heterogeneous work (steady-state decode steps,
+    compile-heavy prefills, raw kernels). ``kind`` keeps a cohort-level
+    history per workload class so consumers can report percentiles for
+    one class (``summary_for``) without a second monitor.
+    """
+
+    # per-kind histories are bounded (recent window) so long-running
+    # serving processes don't leak a float per dispatch forever
+    KIND_HISTORY_MAX = 8192
 
     def __init__(self, ewma_alpha: float = 0.2, eviction_ratio: float = 1.5):
         self.alpha = ewma_alpha
         self.eviction_ratio = eviction_ratio
         self.tenants: Dict[int, TenantLatency] = {}
+        self.by_kind: Dict[str, Deque[float]] = {}
 
-    def record(self, tenant_id: int, latency_s: float, slo_s: float) -> None:
+    def record(
+        self, tenant_id: int, latency_s: float, slo_s: float,
+        kind: str = "default",
+    ) -> None:
         self.tenants.setdefault(tenant_id, TenantLatency()).record(
             latency_s, slo_s, self.alpha
         )
+        self.by_kind.setdefault(
+            kind, collections.deque(maxlen=self.KIND_HISTORY_MAX)
+        ).append(latency_s)
+
+    def slo_attainment(self, tenant_id: int) -> float:
+        """Per-tenant SLO attainment (1.0 for unknown tenants)."""
+        t = self.tenants.get(tenant_id)
+        return t.attainment if t is not None else 1.0
 
     def cohort_median_ewma(self) -> Optional[float]:
         vals = [t.ewma_s for t in self.tenants.values() if t.ewma_s is not None]
@@ -73,31 +104,47 @@ class LatencyMonitor:
 
     # ------------------------------------------------------------ metrics
     def predictability_spread(self) -> float:
-        """Max/min inter-tenant mean-latency gap (paper Fig 4: 25% for MPS).
+        """Max/min inter-tenant typical-latency gap (paper Fig 4: 25% for MPS).
 
-        Returns (max_mean - min_mean) / min_mean over tenants; 0 = perfectly
-        uniform (predictable) cohort.
+        Returns (max - min) / min over each tenant's MEDIAN latency; 0 =
+        perfectly uniform (predictable) cohort. Median rather than mean:
+        with every workload flowing through the unified scheduler, a
+        tenant's history mixes steady-state decode steps with one-off
+        compile-heavy prefills, and the paper's claim is about the
+        steady-state step latency the device scheduler hands each tenant.
         """
-        means = [
-            statistics.mean(t.history) for t in self.tenants.values() if t.history
+        meds = [
+            statistics.median(t.history) for t in self.tenants.values() if t.history
         ]
-        if len(means) < 2 or min(means) == 0.0:
+        if len(meds) < 2 or min(meds) == 0.0:
             return 0.0
-        return (max(means) - min(means)) / min(means)
+        return (max(meds) - min(meds)) / min(meds)
+
+    @staticmethod
+    def _percentiles(latencies: List[float]) -> Dict[str, float]:
+        h = sorted(latencies)
+        return {
+            "p50_s": h[len(h) // 2],
+            "p95_s": h[min(len(h) - 1, int(0.95 * len(h)))],
+            "p99_s": h[min(len(h) - 1, int(0.99 * len(h)))],
+            "mean_s": statistics.mean(h),
+        }
+
+    def summary_for(self, kind: str) -> Dict[str, float]:
+        """Percentiles over one workload class (empty dict if unseen)."""
+        lat = self.by_kind.get(kind)
+        return self._percentiles(lat) if lat else {}
 
     def summary(self) -> Dict[str, float]:
         all_lat = [x for t in self.tenants.values() for x in t.history]
         if not all_lat:
             return {}
-        h = sorted(all_lat)
-        return {
+        out = self._percentiles(all_lat)
+        out.update({
             "num_tenants": float(len(self.tenants)),
-            "p50_s": h[len(h) // 2],
-            "p95_s": h[min(len(h) - 1, int(0.95 * len(h)))],
-            "p99_s": h[min(len(h) - 1, int(0.99 * len(h)))],
-            "mean_s": statistics.mean(h),
             "spread": self.predictability_spread(),
             "slo_violations": float(
                 sum(t.slo_violations for t in self.tenants.values())
             ),
-        }
+        })
+        return out

@@ -1,7 +1,10 @@
 """The four multiplexing strategies under comparison (paper sections 3-4).
 
-Each strategy executes the same list of per-tenant GEMM problems and
-returns (outputs, wall_time_s). TPU adaptation of the CUDA mechanisms:
+Each strategy executes the same list of per-tenant GEMM workloads
+(``GemmProblem``, the kernel-level instance of the generic ``Workload``
+protocol — same ``ShapeBucket``/cost types the unified scheduler and
+``SuperKernelCache`` consume) and returns (outputs, wall_time_s). TPU
+adaptation of the CUDA mechanisms:
 
     exclusive : one tenant owns the device; its problems run as ONE
                 data-batched kernel (the paper's "batched exclusive access"

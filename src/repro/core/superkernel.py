@@ -108,8 +108,10 @@ class SuperKernelCache:
         Problems must share (K, N, dtype) but may have DIFFERENT row counts
         M — e.g. tenants with different live batch sizes. Rows are packed
         group-aligned and run through ONE grouped_gemm pallas_call; the
-        cache key buckets on the padded total row count (pow2) so compile
-        count stays bounded under stochastic M mixes.
+        cache key buckets BOTH the padded total row count and the group
+        count (pow2 each — extra groups carry zero weights and own no row
+        blocks), so the compiled-variant count stays bounded at
+        log2(max_rows) * log2(max_groups) under stochastic M mixes.
         """
         if not problems:
             return []
@@ -132,9 +134,13 @@ class SuperKernelCache:
         xs = jnp.zeros((t_bucket, K), dt)
         for p, off in zip(problems, offsets):
             xs = jax.lax.dynamic_update_slice(xs, p.x.astype(dt), (int(off), 0))
+        g_bucket = self._r_bucket(len(problems))
         ws = jnp.stack([p.w for p in problems])
+        if g_bucket != len(problems):
+            ws = jnp.pad(ws, ((0, g_bucket - len(problems)), (0, 0), (0, 0)))
+            self.stats.padded_problems += g_bucket - len(problems)
 
-        key = (ShapeBucket("grouped", t_bucket, K, N, str(dt)), len(problems))
+        key = (ShapeBucket("grouped", t_bucket, K, N, str(dt)), g_bucket)
         fn = self._cache.get(key)
         if fn is None:
             self.stats.misses += 1

@@ -3,7 +3,10 @@
 The model-level embodiment of space-time scheduling: R tenants of one
 architecture run as ONE vmapped program over stacked weights/caches
 (every layer's GEMMs become inter-model batched super-kernels), with a
-slot-based continuous batcher feeding the decode loop.
+slot-based continuous batcher feeding the decode loop. Prefill and
+decode cohorts are submitted as generic ``Workload`` items through the
+shared ``DynamicSpaceTimeScheduler`` core, which owns admission control,
+per-tenant SLO/latency tracking, and straggler eviction.
 """
 
 from repro.serving.engine import EngineConfig, MultiTenantEngine  # noqa: F401

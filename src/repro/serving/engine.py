@@ -5,9 +5,19 @@ jitted, tenant-vmapped decode step over stacked params + stacked caches —
 every projection/FFN GEMM in the model becomes an inter-model batched
 super-kernel, which is the paper's mechanism applied to whole models.
 
-``mode="time_only"`` provides the contrast case: the same work dispatched
-per-tenant sequentially (one program per tenant per step), modeling CUDA
-context time-slicing. Used by benchmarks/fig3_latency.py.
+All work flows through the shared ``DynamicSpaceTimeScheduler``: each
+admitted prefill and each tenant's decode step is submitted as a generic
+``Workload`` (bucket, cost, SLO, execute-callback) and dispatched by the
+scheduler's pump. The engine therefore inherits admission control,
+per-tenant SLO/latency tracking, and straggler eviction from the core
+instead of duplicating its own monitor plumbing.
+
+``mode="time_only"`` provides the contrast case: each tenant's decode
+cohort gets its OWN bucket, so the scheduler dispatches them sequentially
+(one program per tenant per step), modeling CUDA context time-slicing —
+a tenant's recorded latency then includes waiting for every tenant ahead
+of it in the dispatch order (the paper's linear-slowdown mechanism).
+Used by benchmarks/fig3_latency.py and fig4_predictability.py.
 """
 
 from __future__ import annotations
@@ -20,7 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.slo import LatencyMonitor
+from repro.config import ScheduleConfig
+from repro.core.scheduler import DynamicSpaceTimeScheduler
+from repro.core.workload import Workload
 from repro.core.tenancy import stack_params
 from repro.models import Model
 from repro.serving.kv_cache import SlotManager
@@ -42,6 +54,9 @@ class EngineConfig:
     seed: int = 0
     ewma_alpha: float = 0.2
     eviction_ratio: float = 10.0    # effectively off unless benchmarking isolation
+    # optional override for the shared scheduler core (batching policy,
+    # admission caps, ...); None derives one from the fields above.
+    schedule: Optional[ScheduleConfig] = None
 
 
 class MultiTenantEngine:
@@ -58,7 +73,16 @@ class MultiTenantEngine:
             lambda x: jnp.broadcast_to(x[None], (R,) + x.shape).copy(), single
         )
         self.slots = SlotManager(R, B)
-        self.monitor = LatencyMonitor(config.ewma_alpha, config.eviction_ratio)
+
+        # the unified scheduling core: prefill + decode cohorts flow
+        # through it as Workloads; it owns latency/SLO tracking.
+        schedule = config.schedule or ScheduleConfig(
+            batching_window_s=0.0,
+            max_superkernel_size=max(128, config.num_tenants),
+            latency_ewma_alpha=config.ewma_alpha,
+            straggler_eviction_ratio=config.eviction_ratio,
+        )
+        self.scheduler = DynamicSpaceTimeScheduler(schedule)
 
         self.queue: List[InferenceRequest] = []
         self.active: Dict[tuple, InferenceRequest] = {}  # (tenant, slot) -> req
@@ -67,6 +91,10 @@ class MultiTenantEngine:
         self.steps = 0
         self.decode_tokens = 0
         self._sample_key = jax.random.PRNGKey(config.seed)
+        self._step_logits: Optional[jax.Array] = None  # (R, B, V)
+        self._cohort_step = -1                         # last step decoded merged
+        self._pending_caches: Dict[int, Any] = {}      # time_only per-tenant updates
+        self._pending_logits: Dict[int, jax.Array] = {}
 
         # ---- jitted programs -------------------------------------------------
         def _decode_all(params, tokens, caches, lengths):
@@ -92,6 +120,12 @@ class MultiTenantEngine:
 
         self._prefill_cont = jax.jit(_prefill_cont)
 
+    # ---------------------------------------------------------------- monitor
+    @property
+    def monitor(self):
+        """Per-tenant latency/SLO tracking lives in the shared core."""
+        return self.scheduler.monitor
+
     # ------------------------------------------------------------------ intake
     def submit(self, req: InferenceRequest, now: Optional[float] = None) -> None:
         req.arrival_time = now if now is not None else time.perf_counter()
@@ -103,7 +137,10 @@ class MultiTenantEngine:
         # Prefill runs at EXACT prompt length (one compile per distinct
         # length). Padding would corrupt SSM/RWKV recurrent state; callers
         # wanting fewer compiles should bucket their prompt lengths.
+        # Each admitted prefill is a Workload bucketed by prompt length so
+        # the scheduler accounts its latency per tenant.
         remaining = []
+        submitted = False
         for req in self.queue:
             slot = self.slots.acquire(req.tenant_id, req.request_id)
             if slot is None:
@@ -111,6 +148,33 @@ class MultiTenantEngine:
                 continue
             req.slot = slot
             req.state = RequestState.PREFILLING
+            ok = self.scheduler.submit(Workload(
+                tenant_id=req.tenant_id,
+                bucket=("prefill", len(req.prompt)),
+                cost=float(len(req.prompt)),
+                slo_s=req.slo_s,
+                execute=self._execute_prefill_batch,
+                payload=req,
+                kind="prefill",
+            ))
+            if not ok:
+                # admission control pushed back: return the slot, retry later
+                self.slots.release(req.tenant_id, slot)
+                req.slot = None
+                req.state = RequestState.QUEUED
+                remaining.append(req)
+                continue
+            submitted = True
+        self.queue = remaining
+        if submitted:
+            self.scheduler.flush()
+
+    def _execute_prefill_batch(self, batch: List[Workload]) -> List[int]:
+        """Scheduler executor: prefill each admitted request, install its
+        cache into the stacked cohort, and activate its decode slot."""
+        outs = []
+        for wl in batch:
+            req: InferenceRequest = wl.payload
             params_t = jax.tree.map(lambda x: x[req.tenant_id], self.stacked_params)
             tokens = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
             logits, cache = self._run_prefill(params_t, tokens)
@@ -118,12 +182,13 @@ class MultiTenantEngine:
             req.generated.append(tok)
             req.first_token_time = time.perf_counter()
             req.prefill_time = req.first_token_time
-            self._scatter_slot(req.tenant_id, slot, cache)
-            self.slots.set_length(req.tenant_id, slot, tokens.shape[1])
-            self.last_token[req.tenant_id, slot] = tok
+            self._scatter_slot(req.tenant_id, req.slot, cache)
+            self.slots.set_length(req.tenant_id, req.slot, tokens.shape[1])
+            self.last_token[req.tenant_id, req.slot] = tok
             req.state = RequestState.DECODING
-            self.active[(req.tenant_id, slot)] = req
-        self.queue = remaining
+            self.active[(req.tenant_id, req.slot)] = req
+            outs.append(tok)
+        return outs
 
     def _run_prefill(self, params_t, tokens):
         """Whole-prompt or chunked prefill (bounded compile count)."""
@@ -172,38 +237,103 @@ class MultiTenantEngine:
             out[t] = self.slots.lengths(t)
         return out
 
-    def step(self) -> int:
-        """One engine iteration: admit + one decode step. Returns #tokens."""
-        self._admit()
-        if not self.active:
-            return 0
-        lengths = jnp.asarray(self._lengths())
-        tokens = jnp.asarray(self.last_token)
-        t0 = time.perf_counter()
+    def _execute_decode_cohort(self, batch: List[Workload]) -> List[jax.Array]:
+        """space_time executor: ONE tenant-vmapped program for the whole
+        cohort — every active tenant in the batch shares the dispatch.
 
-        per_tenant_time: Dict[int, float] = {}
-        if self.cfg.mode == "space_time":
+        The decode runs exactly once per engine step even if the scheduler
+        splits the cohort's workloads across pump batches (caches must
+        advance once); later sub-batches reuse the same step's logits."""
+        if self._cohort_step != self.steps:
+            lengths = jnp.asarray(self._lengths())
+            tokens = jnp.asarray(self.last_token)
             logits, self.caches = self._decode_all(
                 self.stacked_params, tokens, self.caches, lengths
             )
-            logits = jax.block_until_ready(logits)
-        else:  # time_only: sequential per-tenant dispatch
-            outs = []
-            new_caches = []
-            for t in range(self.cfg.num_tenants):
-                tt0 = time.perf_counter()
-                params_t = jax.tree.map(lambda x: x[t], self.stacked_params)
-                caches_t = jax.tree.map(lambda x: x[t], self.caches)
-                lg, nc = self._decode_one(params_t, tokens[t], caches_t, lengths[t])
-                outs.append(jax.block_until_ready(lg))
-                new_caches.append(nc)
-                # a tenant's request latency includes waiting for every
-                # tenant AHEAD of it in the time-slice order (the paper's
-                # linear-slowdown mechanism)
-                per_tenant_time[t] = time.perf_counter() - t0
-            logits = jnp.stack(outs)
-            self.caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
-        step_time = time.perf_counter() - t0
+            self._step_logits = jax.block_until_ready(logits)
+            self._cohort_step = self.steps
+        return [self._step_logits[wl.payload] for wl in batch]
+
+    def _execute_decode_tenant(self, batch: List[Workload]) -> List[jax.Array]:
+        """time_only executor: a per-tenant program with a device sync per
+        dispatch (the CUDA context-switch analogue). Cache/logit updates
+        are staged and scattered into the stacked trees once per step."""
+        outs = []
+        for wl in batch:
+            t = wl.payload
+            params_t = jax.tree.map(lambda x: x[t], self.stacked_params)
+            caches_t = jax.tree.map(lambda x: x[t], self.caches)
+            tokens_t = jnp.asarray(self.last_token[t])
+            lengths_t = jnp.asarray(self.slots.lengths(t), jnp.int32)
+            lg, nc = self._decode_one(params_t, tokens_t, caches_t, lengths_t)
+            lg = jax.block_until_ready(lg)
+            self._pending_caches[t] = nc
+            self._pending_logits[t] = lg
+            outs.append(lg)
+        return outs
+
+    def _apply_pending_tenant_updates(self) -> None:
+        """Scatter time_only per-tenant cache/logit updates in one pass."""
+        if not self._pending_caches:
+            return
+        ts = sorted(self._pending_caches)
+        idx = jnp.asarray(ts)
+        small = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[self._pending_caches[t] for t in ts]
+        )
+        self.caches = jax.tree.map(
+            lambda big, sm: big.at[idx].set(sm.astype(big.dtype)),
+            self.caches, small,
+        )
+        lgs = jnp.stack([self._pending_logits[t] for t in ts])
+        if self._step_logits is None or self._step_logits.shape[-1] != lgs.shape[-1]:
+            R, B = self.cfg.num_tenants, self.cfg.slots_per_tenant
+            self._step_logits = jnp.zeros((R, B, lgs.shape[-1]), lgs.dtype)
+        self._step_logits = self._step_logits.at[idx].set(lgs)
+        self._pending_caches.clear()
+        self._pending_logits.clear()
+
+    def step(self) -> int:
+        """One engine iteration: admit + one decode step. Returns #tokens.
+
+        The decode cohort is submitted to the shared scheduler as one
+        Workload per active tenant. In space_time mode they share one
+        bucket (one merged dispatch — identical completion time for every
+        tenant, predictability by construction); in time_only mode each
+        tenant gets its own bucket and the scheduler dispatches them
+        sequentially.
+        """
+        self._admit()
+        if not self.active:
+            return 0
+
+        slo_by_tenant: Dict[int, float] = {}
+        slots_by_tenant: Dict[int, int] = {}
+        for (t, _), req in self.active.items():
+            slo_by_tenant[t] = min(slo_by_tenant.get(t, float("inf")), req.slo_s)
+            slots_by_tenant[t] = slots_by_tenant.get(t, 0) + 1
+        for t in sorted(slots_by_tenant):
+            merged = self.cfg.mode == "space_time"
+            ok = self.scheduler.submit(Workload(
+                tenant_id=t,
+                bucket=("decode", "cohort") if merged else ("decode", t),
+                cost=float(slots_by_tenant[t]),
+                slo_s=slo_by_tenant[t],
+                execute=(self._execute_decode_cohort if merged
+                         else self._execute_decode_tenant),
+                payload=t,
+                kind="decode",
+            ))
+            if not ok:
+                # a dropped decode workload would silently desync caches
+                raise RuntimeError(
+                    "decode workload rejected by scheduler admission control; "
+                    "max_pending_per_tenant must admit one decode workload "
+                    "per tenant per step"
+                )
+        self.scheduler.flush()
+        self._apply_pending_tenant_updates()
+        logits = self._step_logits
 
         if self.cfg.sampling.greedy:
             next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
@@ -218,7 +348,6 @@ class MultiTenantEngine:
             produced += 1
             self.slots.set_length(t, s, self.slots.slots[(t, s)].length + 1)
             self.last_token[t, s] = tok
-            self.monitor.record(t, per_tenant_time.get(t, step_time), req.slo_s)
             if req.done:
                 req.finish_time = now
                 req.state = RequestState.FINISHED
@@ -243,8 +372,14 @@ class MultiTenantEngine:
             "decode_tokens": float(self.decode_tokens),
             "finished": float(len(self.finished)),
             "slot_utilization": self.slots.utilization(),
+            "scheduler_dispatches": float(self.scheduler.stats.dispatches),
         }
         rep.update(self.monitor.summary())
+        # decode-step semantics for the headline percentiles: prefill
+        # dispatches (compile-heavy) are tracked too but reported apart
+        rep.update(self.monitor.summary_for("decode"))
+        rep.update({f"prefill_{k}": v
+                    for k, v in self.monitor.summary_for("prefill").items()})
         lats = [r.latency_s for r in self.finished if r.latency_s is not None]
         if lats:
             rep["req_mean_latency_s"] = float(np.mean(lats))

@@ -9,6 +9,9 @@ per-tenant results as sequential per-tenant execution.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import ScheduleConfig
@@ -59,6 +62,34 @@ def test_batched_equals_sequential(n, m, k, nn, max_sk, bucketing, seed):
         np.testing.assert_allclose(
             np.asarray(p.result), np.asarray(p.x @ p.w), rtol=1e-4, atol=1e-3
         )
+
+
+@given(
+    ms=st.lists(st.integers(1, 160), min_size=1, max_size=6),
+    k=st.sampled_from([16, 64]),
+    nn=st.sampled_from([8, 48]),
+    seed=st.integers(0, 5),
+)
+def test_ragged_merge_matches_reference(ms, k, nn, seed):
+    """Mixed-M problems through ONE grouped super-kernel == per-problem
+    kernels/ref.py reference outputs."""
+    from repro.kernels import ref
+
+    cache = SuperKernelCache(ScheduleConfig())
+    key = jax.random.PRNGKey(seed)
+    problems = []
+    for t, m in enumerate(ms):
+        kx, kw, key = jax.random.split(key, 3)
+        problems.append(GemmProblem(
+            tenant_id=t,
+            x=jax.random.normal(kx, (m, k), jnp.float32),
+            w=jax.random.normal(kw, (k, nn), jnp.float32)))
+    outs = cache.execute_ragged(problems)
+    for p, out in zip(problems, outs):
+        assert out.shape == (p.x.shape[0], nn)
+        want = ref.batched_gemm(p.x[None], p.w[None])[0]
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-3)
 
 
 @given(n=st.integers(1, 2049))
