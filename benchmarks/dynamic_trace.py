@@ -7,6 +7,13 @@ hit-rate. Expected: hit-rate -> ~1 and latency anneals after the first
 quarter (compiles amortized), demonstrating the super-kernel cache doing
 its job under non-stationary R.
 
+Arrivals come from the ``repro.sim`` trace generator replayed against the
+wall clock — the SAME seeded ``PoissonTrace`` the simulator consumes, so
+a live run and ``--simulate`` (virtual clock + roofline cost model, no
+device work) see bit-identical arrival sequences through one code path.
+A live run can additionally fit a ``CalibratedCostModel`` from its own
+measured dispatches (``--calibrate PATH``) for later simulated replay.
+
 The ``policy`` knob selects the batching-window policy of the unified
 core ("fixed" or "slo_adaptive"); the trace runs under both by default so
 the SLO-aware window's latency win shows up on live (wall-clock)
@@ -15,20 +22,88 @@ arrivals, not just in the Fig-4 virtual-clock replay.
 
 from __future__ import annotations
 
+import argparse
 import time
-from typing import List
+from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ScheduleConfig
-from repro.core import DynamicSpaceTimeScheduler, GemmProblem
 from repro.configs.paper_sgemm import PAPER_GEMM_SHAPES
+from repro.core.queue import ShapeBucket
+from repro.sim import (
+    CalibratedCostModel,
+    PoissonTrace,
+    RooflineCostModel,
+    TenantSpec,
+    simulate,
+)
+
+# historical pacing: ~3 arrivals per 0.2ms tick of the old sleep loop
+RATE_HZ = 15_000.0
+ARRIVALS_PER_EVENT = 3
+
+
+def build_mix(tenants: int, slo_s: float) -> List[TenantSpec]:
+    """All tenants launch the paper's ResNet-18 conv2_2 SGEMM geometry
+    (the original trace's single-shape setting) under one tight SLO."""
+    g = PAPER_GEMM_SHAPES["resnet18_conv2_2"]
+    bucket = ShapeBucket("gemm", g.M, g.K, g.N, "float32")
+    return [
+        TenantSpec(
+            tenant_id=t, name=f"t{t}/{g.name}", bucket=bucket,
+            cost=float(g.flops), flops=float(g.flops),
+            bytes=float(4 * (g.M * g.K + g.K * g.N + g.M * g.N)),
+            slo_s=slo_s, kind="kernel",
+        )
+        for t in range(tenants)
+    ]
+
+
+def _schedule(policy: str) -> ScheduleConfig:
+    return ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32,
+                          batching_policy=policy)
+
+
+def _print_quarters(lat: List[float], hit_marks: Optional[List[float]],
+                    policy: str, csv_rows) -> None:
+    q = max(1, len(lat) // 4)
+    print(f"{'quarter':>8s} {'mean lat ms':>12s} {'hit rate':>9s}")
+    for qi in range(4):
+        seg = lat[qi * q:(qi + 1) * q]
+        if not seg:
+            continue
+        hit = hit_marks[min((qi + 1) * q, len(hit_marks)) - 1] if hit_marks else float("nan")
+        print(f"{qi+1:8d} {np.mean(seg)*1e3:12.3f} {hit:9.2f}")
+        if csv_rows is not None:
+            csv_rows.append((f"dynamic_trace/{policy}/q{qi+1}",
+                             float(np.mean(seg) * 1e6),
+                             f"hit_rate={hit:.2f}"))
 
 
 def run(num_events: int = 200, tenants: int = 12, seed: int = 0, csv_rows=None,
-        policy: str = "fixed", slo_s: float = 0.010):
+        policy: str = "fixed", slo_s: float = 0.010,
+        simulate_only: bool = False, calibrate_path: Optional[str] = None):
+    mix = build_mix(tenants, slo_s)
+    trace = PoissonTrace(mix, RATE_HZ, events=ARRIVALS_PER_EVENT * num_events,
+                         seed=seed)
+
+    if simulate_only:
+        print(f"\n=== Dynamic trace (SIMULATED): policy={policy} ===")
+        m = simulate(trace, _schedule(policy), RooflineCostModel())
+        _print_quarters(list(m.lat), None, f"sim/{policy}", csv_rows)
+        s = m.summary()
+        print(f"final: dispatches={s['dispatches']:.0f} "
+              f"problems={s['completed']:.0f} "
+              f"attainment={s['slo_attainment']:.2f} "
+              f"p95={s['p95_s']*1e3:.3f}ms")
+        return s
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import DynamicSpaceTimeScheduler, GemmProblem
+
     print(f"\n=== Dynamic trace: cache warm-up under stochastic arrivals "
           f"(policy={policy}) ===")
     g = PAPER_GEMM_SHAPES["resnet18_conv2_2"]
@@ -41,56 +116,74 @@ def run(num_events: int = 200, tenants: int = 12, seed: int = 0, csv_rows=None,
     xs = [jax.random.normal(jax.random.fold_in(key, 1000 + i), (g.M, g.K), jnp.float32)
           for i in range(8)]
 
+    calibrated = CalibratedCostModel() if calibrate_path else None
     sched = DynamicSpaceTimeScheduler(
-        ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32,
-                       batching_policy=policy)
+        _schedule(policy),
+        on_dispatch=calibrated.observe if calibrated else None,
     )
     lat: List[float] = []
     hit_marks: List[float] = []
-    t_clock = time.perf_counter()
-    for i in range(num_events):
-        # Poisson batch of arrivals (bursty, like online traffic)
-        for _ in range(1 + rng.poisson(2.0)):
-            t = int(rng.integers(tenants))
-            # tight SLO so the adaptive policy's slack-shrinking window
-            # actually diverges from the fixed one on a live trace
-            sched.submit(GemmProblem(tenant_id=t, x=xs[int(rng.integers(len(xs)))],
-                                     w=ws[t], slo_s=slo_s))
-        done = sched.pump()
+
+    def collect(done):
         for p in done:
             lat.append(p.completion_time - p.arrival_time)
             hit_marks.append(sched.cache.stats.hit_rate)
-        time.sleep(0.0002)
-    for p in sched.flush():
-        lat.append(p.completion_time - p.arrival_time)
-        hit_marks.append(sched.cache.stats.hit_rate)
 
-    q = max(1, len(lat) // 4)
-    print(f"{'quarter':>8s} {'mean lat ms':>12s} {'hit rate':>9s}")
-    for qi in range(4):
-        seg = lat[qi * q:(qi + 1) * q]
-        hseg = hit_marks[qi * q:(qi + 1) * q]
-        if not seg:
-            continue
-        print(f"{qi+1:8d} {np.mean(seg)*1e3:12.3f} {hseg[-1]:9.2f}")
-        if csv_rows is not None:
-            csv_rows.append((f"dynamic_trace/{policy}/q{qi+1}",
-                             float(np.mean(seg) * 1e6),
-                             f"hit_rate={hseg[-1]:.2f}"))
+    t0 = time.perf_counter()
+    for ev in trace:
+        # replay the trace's timeline against the wall clock
+        delay = (t0 + ev.t_s) - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        t = ev.spec.tenant_id
+        sched.submit(GemmProblem(tenant_id=t,
+                                 x=xs[int(rng.integers(len(xs)))],
+                                 w=ws[t], slo_s=ev.spec.slo_s))
+        collect(sched.pump())
+    collect(sched.flush())
+
+    _print_quarters(lat, hit_marks, policy, csv_rows)
     rep = sched.report()
     print(f"final: dispatches={rep['dispatches']:.0f} problems={rep['problems']:.0f} "
           f"hit_rate={rep['cache_hit_rate']:.2f} spread={rep.get('spread', 0):.2%} "
           f"p95={rep.get('p95_s', 0)*1e3:.3f}ms")
+    if calibrated is not None:
+        calibrated.save(calibrate_path)
+        print(f"calibrated cost model ({len(calibrated.table)} keys) "
+              f"-> {calibrate_path}")
     return rep
 
 
 def run_all_policies(num_events: int = 200, tenants: int = 12, seed: int = 0,
-                     csv_rows=None):
-    """Same live trace parameters under both batching-window policies."""
+                     csv_rows=None, simulate_only: bool = False):
+    """Same trace parameters under both batching-window policies."""
     for policy in ("fixed", "slo_adaptive"):
         run(num_events=num_events, tenants=tenants, seed=seed,
-            csv_rows=csv_rows, policy=policy)
+            csv_rows=csv_rows, policy=policy, simulate_only=simulate_only)
 
 
 if __name__ == "__main__":
-    run_all_policies()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=200)
+    ap.add_argument("--tenants", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="both",
+                    choices=("fixed", "slo_adaptive", "both"))
+    ap.add_argument("--simulate", action="store_true",
+                    help="replay the same trace on the virtual-clock simulator")
+    ap.add_argument("--calibrate", default=None, metavar="PATH",
+                    help="fit+save a CalibratedCostModel from live dispatches")
+    args = ap.parse_args()
+    if args.calibrate and (args.simulate or args.policy == "both"):
+        # calibration fits from LIVE dispatches of one scheduler; a
+        # simulated run has no measurements and "both" would overwrite
+        # the file with whichever policy ran last
+        ap.error("--calibrate requires a live run with a single --policy "
+                 "(fixed or slo_adaptive), not --simulate or --policy both")
+    if args.policy == "both":
+        run_all_policies(num_events=args.events, tenants=args.tenants,
+                         seed=args.seed, simulate_only=args.simulate)
+    else:
+        run(num_events=args.events, tenants=args.tenants, seed=args.seed,
+            policy=args.policy, simulate_only=args.simulate,
+            calibrate_path=args.calibrate)

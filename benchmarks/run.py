@@ -18,7 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced sweeps")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: table1,fig2,fig3,fig4,fig5,trace,roofline")
+                    help="comma-separated subset: table1,fig2,fig3,fig4,fig5,trace,sim,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -35,6 +35,7 @@ def main() -> None:
         fig4_predictability,
         fig5_replicas,
         roofline_report,
+        sim_sweep,
         table1_sgemm,
     )
 
@@ -52,6 +53,9 @@ def main() -> None:
     if want("trace"):
         dynamic_trace.run_all_policies(
             num_events=80 if args.quick else 200, csv_rows=csv_rows)
+    if want("sim"):
+        sim_sweep.run(events=20_000 if args.quick else 200_000,
+                      csv_rows=csv_rows)
     if want("roofline"):
         roofline_report.run(csv_rows=csv_rows)
         roofline_report.run(mesh="pod2", csv_rows=csv_rows)

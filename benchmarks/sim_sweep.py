@@ -1,0 +1,225 @@
+"""Policy sweep on the trace-driven simulator (repro.sim).
+
+Four sections, all driven by the SAME seeded arrival process through the
+real scheduler on a virtual clock — deterministic per seed, millions of
+events in seconds on CPU:
+
+  1. strategies — one saturating trace priced under each multiplexing
+     strategy's roofline cost model (time_only / space_only / space_time /
+     exclusive). Reproduces the paper's qualitative throughput ordering
+     space_time > space_only > time_only.
+  2. policies — fixed vs slo_adaptive batching window at moderate load:
+     SLO attainment and goodput (adaptive must not be worse).
+  3. grid — batching_window x max_superkernel_size sweep: the space-time
+     trade-off surface (latency vs merge opportunity).
+  4. interference (--interference) — counterfactual pairwise co-run
+     matrix: mean-latency slowdown of tenant i when tenant j shares the
+     device.
+
+``--check`` turns the two headline orderings into hard assertions (CI
+gate); ``--json`` writes a BENCH_sim_sweep.json-style document.
+
+    PYTHONPATH=src python benchmarks/sim_sweep.py --events 1000000
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.config import ScheduleConfig
+from repro.sim import (
+    STRATEGIES,
+    PoissonTrace,
+    RooflineCostModel,
+    SimMetrics,
+    Simulator,
+    TenantSpec,
+    estimate_capacity_hz,
+    interference_matrix,
+    make_trace,
+    paper_sgemm_mix,
+    prefill_decode_mix,
+    to_bench_json,
+)
+
+
+def run_sim(trace, schedule: ScheduleConfig, model) -> SimMetrics:
+    return Simulator(schedule=schedule, cost_model=model).run(trace)
+
+
+def build_mix(name: str, tenants: int) -> List[TenantSpec]:
+    if name == "sgemm":
+        return paper_sgemm_mix(tenants)
+    if name == "serving":
+        return prefill_decode_mix(tenants)
+    raise ValueError(f"unknown mix: {name!r}")
+
+
+def run(events: int = 200_000, tenants: int = 8, seed: int = 0,
+        process: str = "poisson", mix_name: str = "sgemm", rho: float = 0.7,
+        check: bool = False, json_path: Optional[str] = None,
+        with_interference: bool = False, csv_rows=None) -> Dict[str, SimMetrics]:
+    t_wall = time.perf_counter()
+    mix = build_mix(mix_name, tenants)
+    sections: Dict[str, SimMetrics] = {}
+    failures: List[str] = []
+
+    # ---------------------------------------------------------- 1. strategies
+    st_model = RooflineCostModel(strategy="space_time")
+    capacity_hz = estimate_capacity_hz(mix, st_model)
+    sat_hz = 2.0 * capacity_hz  # saturate even the fastest strategy
+    print(f"\n=== sim_sweep: {events} events/section, mix={mix_name}, "
+          f"process={process}, seed={seed} ===")
+    print(f"estimated space_time capacity ~{capacity_hz:,.0f} arrivals/s; "
+          f"strategy section driven at 2x (saturating)")
+    print(f"\n--- strategies (same trace, per-strategy roofline cost) ---")
+    print(f"{'strategy':11s} {'tput cost/s':>12s} {'p95 ms':>9s} "
+          f"{'attain':>7s} {'util':>6s} {'dispatches':>10s}")
+    sched_cfg = ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32)
+    tput: Dict[str, float] = {}
+    for strat in STRATEGIES:
+        trace = make_trace(process, mix, sat_hz, events, seed=seed)
+        m = run_sim(trace, sched_cfg, RooflineCostModel(strategy=strat))
+        s = m.summary()
+        tput[strat] = s["throughput_cost_per_s"]
+        sections[f"strategy_{strat}"] = m
+        print(f"{strat:11s} {s['throughput_cost_per_s']:12.4g} "
+              f"{s['p95_s']*1e3:9.3f} {s['slo_attainment']:7.3f} "
+              f"{s['utilization']:6.3f} {s['dispatches']:10.0f}")
+    print(f"space_time/space_only: {tput['space_time']/tput['space_only']:.2f}x   "
+          f"space_time/time_only: {tput['space_time']/tput['time_only']:.2f}x   "
+          f"(paper: 3.23x / 7.73x)")
+    if not tput["space_time"] > tput["space_only"] > tput["time_only"]:
+        failures.append(
+            f"throughput ordering violated: st={tput['space_time']:.4g} "
+            f"so={tput['space_only']:.4g} to={tput['time_only']:.4g}")
+
+    # ------------------------------------------------------------ 2. policies
+    pol_hz = rho * capacity_hz
+    pol_events = max(events // 2, 1000)
+    # a window wide enough to threaten the tightest SLO tier, so the
+    # adaptive policy has a violation budget to win back
+    pol_window = max(0.5 * min(s.slo_s for s in mix), 0.002)
+    print(f"\n--- batching policies @ rho={rho:.2f} "
+          f"(window {pol_window*1e3:.1f}ms, {pol_events} events) ---")
+    attain: Dict[str, float] = {}
+    for policy in ("fixed", "slo_adaptive"):
+        trace = make_trace(process, mix, pol_hz, pol_events, seed=seed + 1)
+        m = run_sim(trace,
+                    ScheduleConfig(batching_window_s=pol_window,
+                                   batching_policy=policy,
+                                   max_superkernel_size=64),
+                    st_model)
+        s = m.summary()
+        attain[policy] = s["slo_attainment"]
+        sections[f"policy_{policy}"] = m
+        print(f"{policy:12s}: attainment={s['slo_attainment']:.4f} "
+              f"p95={s['p95_s']*1e3:8.3f}ms "
+              f"goodput={s['goodput_cost_per_s']:.4g} "
+              f"dispatches={s['dispatches']:.0f}")
+    print(f"adaptive >= fixed attainment: "
+          f"{attain['slo_adaptive'] >= attain['fixed']}")
+    if attain["slo_adaptive"] < attain["fixed"]:
+        failures.append(
+            f"SLO attainment ordering violated: adaptive={attain['slo_adaptive']:.4f} "
+            f"< fixed={attain['fixed']:.4f}")
+
+    # ---------------------------------------------------------------- 3. grid
+    grid_events = max(events // 20, 1000)
+    print(f"\n--- window x size grid @ rho={rho:.2f} "
+          f"({grid_events} events/cell) ---")
+    print(f"{'window ms':>9s} {'size':>5s} {'p95 ms':>9s} {'attain':>7s} "
+          f"{'goodput':>10s} {'dispatches':>10s}")
+    for window_s in (0.0005, 0.001, 0.002, 0.004):
+        for size in (8, 32, 128):
+            trace = make_trace(process, mix, pol_hz, grid_events, seed=seed + 2)
+            m = run_sim(trace,
+                        ScheduleConfig(batching_window_s=window_s,
+                                       max_superkernel_size=size),
+                        st_model)
+            s = m.summary()
+            sections[f"grid_w{window_s*1e3:g}ms_s{size}"] = m
+            print(f"{window_s*1e3:9.1f} {size:5d} {s['p95_s']*1e3:9.3f} "
+                  f"{s['slo_attainment']:7.3f} {s['goodput_cost_per_s']:10.4g} "
+                  f"{s['dispatches']:10.0f}")
+
+    # -------------------------------------------------------- 4. interference
+    if with_interference:
+        # one spec per tenant (serving mixes carry prefill+decode streams
+        # per tenant; the matrix is keyed per tenant) — heaviest stream wins
+        by_tenant: Dict[int, TenantSpec] = {}
+        for s in mix:
+            if s.tenant_id < min(4, tenants):
+                cur = by_tenant.get(s.tenant_id)
+                if cur is None or s.weight > cur.weight:
+                    by_tenant[s.tenant_id] = s
+        sub = [by_tenant[t] for t in sorted(by_tenant)]
+        pair_events = max(events // 50, 500)
+
+        def run_subset(specs):
+            trace = PoissonTrace(specs, rate_hz=pol_hz * len(specs) / len(mix),
+                                 events=pair_events, seed=seed + 3)
+            return run_sim(trace, sched_cfg, st_model)
+
+        M = interference_matrix(run_subset, sub)
+        width = max(len(s.name) for s in sub)
+        print(f"\n--- tenant interference (mean-latency slowdown, "
+              f"{pair_events} events/pair) ---")
+        print(" " * (width + 1) + " ".join(f"+{s.name:<{width}s}" for s in sub))
+        for i, s in enumerate(sub):
+            print(f"{s.name:<{width}s}  " +
+                  " ".join(f"{M[i, j]:<{width}.2f} " for j in range(len(sub))))
+
+    # ---------------------------------------------------------------- outputs
+    if csv_rows is not None:
+        for name, m in sections.items():
+            csv_rows.extend(m.bench_rows(f"sim_sweep/{name}"))
+    if json_path:
+        with open(json_path, "w") as fh:
+            fh.write(to_bench_json(
+                "sim_sweep", sections,
+                extra={"events": events, "seed": seed, "process": process,
+                       "mix": mix_name, "rho": rho,
+                       "capacity_hz": capacity_hz}))
+        print(f"\nwrote {json_path}")
+
+    print(f"\ntotal wall time: {time.perf_counter() - t_wall:.1f}s")
+    if failures:
+        for f in failures:
+            print(f"CHECK FAILED: {f}", file=sys.stderr)
+        if check:
+            sys.exit(1)
+    elif check:
+        print("checks passed: space_time > space_only > time_only throughput; "
+              "adaptive >= fixed SLO attainment")
+    return sections
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--events", type=int, default=200_000,
+                    help="arrivals for the strategy section (others scale down)")
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--process", default="poisson",
+                    choices=("poisson", "mmpp", "diurnal", "flash"))
+    ap.add_argument("--mix", default="sgemm", choices=("sgemm", "serving"))
+    ap.add_argument("--rho", type=float, default=0.7,
+                    help="offered load as a fraction of space_time capacity")
+    ap.add_argument("--json", default=None, help="write BENCH-style JSON here")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless headline orderings hold")
+    ap.add_argument("--interference", action="store_true",
+                    help="include the pairwise tenant-interference matrix")
+    args = ap.parse_args()
+    run(events=args.events, tenants=args.tenants, seed=args.seed,
+        process=args.process, mix_name=args.mix, rho=args.rho,
+        check=args.check, json_path=args.json,
+        with_interference=args.interference)
+
+
+if __name__ == "__main__":
+    main()

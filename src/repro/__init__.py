@@ -9,6 +9,7 @@ Public API surface:
     repro.models      -- pure-JAX model substrate
     repro.kernels     -- Pallas TPU super-kernels (+ jnp reference oracles)
     repro.core        -- the paper's contribution: the space-time scheduler
+    repro.sim         -- trace-driven simulation + calibrated cost models
     repro.serving     -- multi-tenant inference engine
     repro.training    -- optimizer / data / checkpoint / train loop
     repro.distributed -- sharding rules and mesh helpers

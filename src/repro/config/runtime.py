@@ -72,6 +72,29 @@ class ScheduleConfig:
     # analogue).
     allow_ragged_merge: bool = False
 
+    def __post_init__(self) -> None:
+        # Fail at construction, not deep inside the pump where a negative
+        # window reads as "every bucket is instantly ripe" and a size cap
+        # of 0 as an infinite pop loop.
+        if self.batching_window_s < 0.0:
+            raise ValueError(
+                f"batching_window_s must be >= 0, got {self.batching_window_s}"
+            )
+        if self.min_batching_window_s < 0.0:
+            raise ValueError(
+                "min_batching_window_s must be >= 0, "
+                f"got {self.min_batching_window_s}"
+            )
+        if self.max_superkernel_size < 1:
+            raise ValueError(
+                f"max_superkernel_size must be >= 1, got {self.max_superkernel_size}"
+            )
+        if self.max_pending_per_tenant is not None and self.max_pending_per_tenant < 1:
+            raise ValueError(
+                "max_pending_per_tenant must be >= 1 or None, "
+                f"got {self.max_pending_per_tenant}"
+            )
+
 
 @dataclasses.dataclass(frozen=True)
 class RuntimeConfig:

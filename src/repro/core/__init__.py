@@ -35,4 +35,4 @@ from repro.core.queue import (  # noqa: F401
 from repro.core.scheduler import DynamicSpaceTimeScheduler  # noqa: F401
 from repro.core.superkernel import SuperKernelCache  # noqa: F401
 from repro.core.tenancy import TenantManager, stack_params, unstack_params  # noqa: F401
-from repro.core.workload import Workload  # noqa: F401
+from repro.core.workload import Workload, round_pow2  # noqa: F401

@@ -66,6 +66,7 @@ class DynamicSpaceTimeScheduler:
         clock: Optional[Clock] = None,
         policy: Optional[BatchingPolicy] = None,
         cost_model: Optional[Callable[[Sequence], float]] = None,
+        on_dispatch: Optional[Callable[[List, float], None]] = None,
     ):
         self.schedule = schedule or ScheduleConfig()
         self.clock = clock or WallClock()
@@ -73,6 +74,10 @@ class DynamicSpaceTimeScheduler:
         # Maps a dispatched batch to modeled seconds; a VirtualClock then
         # advances by it, making completion times deterministic.
         self.cost_model = cost_model
+        # Called with (batch, elapsed_s) after every super-dispatch — the
+        # calibration tap a CalibratedCostModel (repro.sim.costmodel)
+        # learns per-(bucket, pow2-R) dispatch costs through.
+        self.on_dispatch = on_dispatch
         self.queue = WorkQueue()
         self.cache = SuperKernelCache(self.schedule)
         self.monitor = LatencyMonitor(
@@ -186,6 +191,8 @@ class DynamicSpaceTimeScheduler:
         self.stats.problems_completed += len(batch)
         self.stats.total_cost += sum(float(getattr(p, "cost", 0.0)) for p in batch)
         self.stats.busy_time_s += t1 - t0
+        if self.on_dispatch is not None:
+            self.on_dispatch(batch, t1 - t0)
 
         for p, out in zip(batch, outs):
             p.result = out

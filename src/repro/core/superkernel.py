@@ -25,15 +25,13 @@ import numpy as np
 
 from repro.config import ScheduleConfig
 from repro.core.queue import GemmProblem, ShapeBucket
+from repro.core.workload import round_pow2
 from repro.kernels import ops
 from repro.kernels.grouped_gemm import make_group_layout
 
-
-def _round_pow2(n: int) -> int:
-    r = 1
-    while r < n:
-        r *= 2
-    return r
+# Backwards-compatible alias — the shared definition lives in
+# ``repro.core.workload`` so cache keys and cost-model keys agree.
+_round_pow2 = round_pow2
 
 
 @dataclasses.dataclass
@@ -61,7 +59,7 @@ class SuperKernelCache:
     def _r_bucket(self, r: int) -> int:
         if self.schedule.r_bucketing == "exact":
             return r
-        return _round_pow2(r)
+        return round_pow2(r)
 
     def _build(self, bucket: ShapeBucket, r_bucket: int) -> Callable:
         def call(xs: jax.Array, ws: jax.Array) -> jax.Array:

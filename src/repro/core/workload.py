@@ -39,6 +39,20 @@ from typing import Any, Callable, Hashable, List, Optional
 _seq = itertools.count()
 
 
+def round_pow2(n: int) -> int:
+    """Round ``n`` up to the next power of two (``round_pow2(0) == 1``).
+
+    The canonical bucketing helper shared by the super-kernel compile
+    cache (R and row-count buckets), the engine's ragged-group bucketing,
+    and the simulator's calibrated cost-model keys — one definition so a
+    live-measured (bucket, pow2-R) cost always lands in the same bucket a
+    simulation will look up.
+    """
+    if n <= 1:
+        return 1
+    return 1 << (n - 1).bit_length()
+
+
 @dataclasses.dataclass
 class Workload:
     """Concrete generic work item (see module docstring for the protocol).

@@ -21,10 +21,51 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
-# ----------------------------------------------------------------- constants
-PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
-HBM_BW = 819e9             # bytes/s per chip
-ICI_BW = 50e9              # bytes/s per link (per chip, one direction)
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip accelerator roofline description.
+
+    One reusable record instead of scattered module constants, so the
+    roofline report, the derived-TPU benchmark models, and the
+    ``repro.sim`` cost models all price work against the same hardware
+    description (and alternative chips are a dataclass instance away).
+
+    The dispatch/pipeline terms extend the classic three-roof model with
+    the launch-cost constants the space-time paper's gains hinge on:
+    merging R kernels into one super-kernel pays ``dispatch_overhead_s``
+    once instead of R times.
+    """
+
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link (one direction)
+    dispatch_overhead_s: float = 2e-6    # host launch cost per kernel
+    context_switch_s: float = 5e-6       # time-sliced context swap cost
+    mxu_dim: int = 128                   # systolic array tile edge
+    mxu_freq_hz: float = 940e6
+
+    def t_compute(self, flops: float) -> float:
+        return flops / self.peak_flops
+
+    def t_memory(self, bytes_moved: float) -> float:
+        return bytes_moved / self.hbm_bw
+
+    def t_collective(self, bytes_moved: float) -> float:
+        return bytes_moved / self.ici_bw
+
+    def pipe_fill_s(self) -> float:
+        """Systolic pipeline fill paid once per distinct kernel launch."""
+        return self.mxu_dim / self.mxu_freq_hz
+
+
+TPU_V5E = HardwareSpec()
+
+# Backwards-compatible module constants (pre-HardwareSpec callers).
+PEAK_FLOPS = TPU_V5E.peak_flops
+HBM_BW = TPU_V5E.hbm_bw
+ICI_BW = TPU_V5E.ici_bw
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -107,6 +148,7 @@ class RooflineReport:
     analytic_flops: float = 0.0  # trip-count-exact analytic model (global)
     analytic_bytes: float = 0.0
     analytic_coll: Optional[Dict[str, float]] = None  # per-chip, trip-exact
+    spec: HardwareSpec = TPU_V5E
 
     @property
     def coll_total(self) -> int:
@@ -118,11 +160,11 @@ class RooflineReport:
 
     @property
     def t_compute(self) -> float:
-        return self.analytic_flops / (self.chips * PEAK_FLOPS)
+        return self.spec.t_compute(self.analytic_flops / self.chips)
 
     @property
     def t_memory(self) -> float:
-        return self.analytic_bytes / (self.chips * HBM_BW)
+        return self.spec.t_memory(self.analytic_bytes / self.chips)
 
     @property
     def t_collective(self) -> float:
@@ -132,8 +174,8 @@ class RooflineReport:
         (lower bound); the analytic model is trip-count exact but
         first-order.
         """
-        text = self.coll_time_bytes / ICI_BW
-        ana = (self.analytic_coll or {}).get("total", 0.0) / ICI_BW
+        text = self.spec.t_collective(self.coll_time_bytes)
+        ana = self.spec.t_collective((self.analytic_coll or {}).get("total", 0.0))
         return max(text, ana)
 
     @property

@@ -1,0 +1,249 @@
+"""Simulation metrics: latency percentiles, SLO attainment, goodput,
+utilization, and tenant-interference — with deterministic JSON export.
+
+``MetricsAccumulator`` ingests completed workloads one at a time in the
+simulator's hot loop (columnar ``array`` appends, no per-item objects —
+million-event runs stay cheap) and freezes into a ``SimMetrics`` whose
+summary is computed vectorized at the end.
+
+Exports are BENCH-compatible: ``SimMetrics.bench_rows()`` yields the same
+``(name, us_per_call, derived)`` triples the benchmark driver's CSV block
+prints, and ``to_bench_json()`` wraps them plus the full metric dict into
+one JSON document (``BENCH_<name>.json``). All exports use sorted keys
+and pure-deterministic arithmetic, so one seed produces one byte-exact
+JSON — the determinism contract the tests pin.
+"""
+
+from __future__ import annotations
+
+import json
+from array import array
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class MetricsAccumulator:
+    """Columnar per-completion record store (hot-loop ingestion side)."""
+
+    def __init__(self) -> None:
+        self._lat = array("d")
+        self._slo = array("d")
+        self._cost = array("d")
+        self._tenant = array("l")
+        self._kind_idx = array("l")
+        self._kinds: Dict[str, int] = {}
+
+    def add(self, tenant_id: int, latency_s: float, slo_s: float,
+            cost: float, kind: str) -> None:
+        self._lat.append(latency_s)
+        self._slo.append(slo_s)
+        self._cost.append(cost)
+        self._tenant.append(tenant_id)
+        ki = self._kinds.get(kind)
+        if ki is None:
+            ki = self._kinds.setdefault(kind, len(self._kinds))
+        self._kind_idx.append(ki)
+
+    def __len__(self) -> int:
+        return len(self._lat)
+
+    def freeze(self, sim_duration_s: float, busy_time_s: float,
+               dispatches: int, rejected: int = 0,
+               evicted_tenants: int = 0) -> "SimMetrics":
+        return SimMetrics(
+            lat=np.asarray(self._lat, np.float64),
+            slo=np.asarray(self._slo, np.float64),
+            cost=np.asarray(self._cost, np.float64),
+            tenant=np.asarray(self._tenant, np.int64),
+            kind_idx=np.asarray(self._kind_idx, np.int64),
+            kinds=[k for k, _ in sorted(self._kinds.items(), key=lambda kv: kv[1])],
+            sim_duration_s=float(sim_duration_s),
+            busy_time_s=float(busy_time_s),
+            dispatches=int(dispatches),
+            rejected=int(rejected),
+            evicted_tenants=int(evicted_tenants),
+        )
+
+
+def _pct(lat: np.ndarray) -> Dict[str, float]:
+    if lat.size == 0:
+        return {"p50_s": 0.0, "p95_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
+    p50, p95, p99 = np.percentile(lat, [50.0, 95.0, 99.0])
+    return {"p50_s": float(p50), "p95_s": float(p95), "p99_s": float(p99),
+            "mean_s": float(lat.mean())}
+
+
+class SimMetrics:
+    """Frozen simulation outcome; every metric derives from the columns."""
+
+    def __init__(self, lat, slo, cost, tenant, kind_idx, kinds,
+                 sim_duration_s, busy_time_s, dispatches,
+                 rejected=0, evicted_tenants=0):
+        self.lat = lat
+        self.slo = slo
+        self.cost = cost
+        self.tenant = tenant
+        self.kind_idx = kind_idx
+        self.kinds = kinds
+        self.sim_duration_s = sim_duration_s
+        self.busy_time_s = busy_time_s
+        self.dispatches = dispatches
+        self.rejected = rejected
+        self.evicted_tenants = evicted_tenants
+        self._met = lat <= slo if lat.size else np.zeros(0, bool)
+
+    # ------------------------------------------------------------- headline
+    @property
+    def completed(self) -> int:
+        return int(self.lat.size)
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of completed workloads that met their SLO."""
+        return float(self._met.mean()) if self.lat.size else 1.0
+
+    @property
+    def throughput_cost_per_s(self) -> float:
+        """Simulated throughput in cost units (FLOPs/tokens) per second."""
+        if self.sim_duration_s <= 0.0:
+            return 0.0
+        return float(self.cost.sum()) / self.sim_duration_s
+
+    @property
+    def goodput_cost_per_s(self) -> float:
+        """Throughput counting only SLO-met work (D-STACK's usefulness
+        criterion: late answers don't count)."""
+        if self.sim_duration_s <= 0.0:
+            return 0.0
+        return float(self.cost[self._met].sum()) / self.sim_duration_s
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of simulated time the device was busy."""
+        if self.sim_duration_s <= 0.0:
+            return 0.0
+        return min(1.0, self.busy_time_s / self.sim_duration_s)
+
+    # ------------------------------------------------------------ breakdowns
+    def per_tenant(self) -> Dict[int, Dict[str, float]]:
+        out: Dict[int, Dict[str, float]] = {}
+        for t in np.unique(self.tenant):
+            mask = self.tenant == t
+            d = _pct(self.lat[mask])
+            d["slo_attainment"] = float(self._met[mask].mean())
+            d["completed"] = float(mask.sum())
+            out[int(t)] = d
+        return out
+
+    def per_kind(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for ki, kind in enumerate(self.kinds):
+            mask = self.kind_idx == ki
+            if not mask.any():
+                continue
+            d = _pct(self.lat[mask])
+            d["slo_attainment"] = float(self._met[mask].mean())
+            out[kind] = d
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        out = _pct(self.lat)
+        out.update({
+            "completed": float(self.completed),
+            "dispatches": float(self.dispatches),
+            "rejected": float(self.rejected),
+            "evicted_tenants": float(self.evicted_tenants),
+            "sim_duration_s": self.sim_duration_s,
+            "busy_time_s": self.busy_time_s,
+            "utilization": self.utilization,
+            "slo_attainment": self.slo_attainment,
+            "throughput_cost_per_s": self.throughput_cost_per_s,
+            "goodput_cost_per_s": self.goodput_cost_per_s,
+        })
+        return out
+
+    # --------------------------------------------------------------- export
+    def bench_rows(self, prefix: str) -> List[Tuple[str, float, str]]:
+        """``(name, us_per_call, derived)`` triples, the benchmark driver's
+        CSV schema, for appending to a run's ``csv_rows``."""
+        s = self.summary()
+        return [
+            (f"{prefix}/p50", s["p50_s"] * 1e6, "us latency"),
+            (f"{prefix}/p95", s["p95_s"] * 1e6, "us latency"),
+            (f"{prefix}/p99", s["p99_s"] * 1e6, "us latency"),
+            (f"{prefix}/attainment", s["slo_attainment"] * 100.0, "pct SLO met"),
+            (f"{prefix}/goodput", s["goodput_cost_per_s"],
+             "cost_units_per_s_slo_met"),
+            (f"{prefix}/utilization", s["utilization"] * 100.0, "pct busy"),
+        ]
+
+    def to_dict(self) -> Dict:
+        return {
+            "summary": self.summary(),
+            "per_tenant": {str(k): v for k, v in self.per_tenant().items()},
+            "per_kind": self.per_kind(),
+        }
+
+    def to_json(self) -> str:
+        """Canonical (sorted-keys) JSON — byte-identical across same-seed
+        runs; the determinism tests compare these strings directly."""
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+
+def to_bench_json(name: str, sections: Dict[str, SimMetrics],
+                  extra: Optional[Dict] = None) -> str:
+    """One BENCH_<name>.json document over named simulation sections."""
+    rows = []
+    for section, metrics in sorted(sections.items()):
+        rows.extend(
+            {"name": n, "us_per_call": v, "derived": d}
+            for n, v, d in metrics.bench_rows(f"{name}/{section}")
+        )
+    doc = {
+        "benchmark": name,
+        "rows": rows,
+        "sections": {k: m.to_dict() for k, m in sorted(sections.items())},
+    }
+    if extra:
+        doc["extra"] = extra
+    return json.dumps(doc, indent=2, sort_keys=True)
+
+
+def interference_matrix(
+    run_mix: Callable[[Sequence], SimMetrics],
+    specs: Sequence,
+) -> np.ndarray:
+    """Tenant-interference (isolation) matrix from counterfactual co-runs.
+
+    ``M[i][j]`` = mean latency of tenant ``i`` co-run with tenant ``j``,
+    divided by tenant ``i``'s solo mean latency — 1.0 everywhere means
+    perfect isolation; row spikes name the victim, column spikes the
+    aggressor. ``run_mix(specs_subset)`` must run one deterministic
+    simulation over the given subset (the simulator is fast enough that
+    the O(T^2) counterfactuals finish in seconds).
+
+    Specs must carry distinct tenant_ids: results are keyed per tenant,
+    so two specs of one tenant (e.g. a serving mix's prefill + decode
+    streams) would blend into one meaningless row — pick one spec per
+    tenant before calling.
+    """
+    n = len(specs)
+    if len({s.tenant_id for s in specs}) != n:
+        raise ValueError(
+            "interference_matrix needs unique tenant_ids; pick one spec "
+            "per tenant (got "
+            f"{sorted(s.tenant_id for s in specs)})")
+    solo = np.empty(n)
+    for i, s in enumerate(specs):
+        pt = run_mix([s]).per_tenant()
+        solo[i] = pt[s.tenant_id]["mean_s"]
+    M = np.ones((n, n))
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            pt = run_mix([specs[i], specs[j]]).per_tenant()
+            mean_i = pt.get(specs[i].tenant_id, {}).get("mean_s", 0.0)
+            M[i, j] = mean_i / solo[i] if solo[i] > 0 else 1.0
+    return M

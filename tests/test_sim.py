@@ -1,0 +1,336 @@
+"""The trace-driven simulation subsystem (repro.sim): arrival processes,
+roofline + calibrated cost models, the discrete-event loop over the real
+scheduler, and the determinism / ordering contracts CI asserts on.
+
+The hypothesis load-monotonicity property lives at the bottom behind the
+usual importorskip guard; a plain parametrized version of the same
+property runs everywhere.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.config import ScheduleConfig
+from repro.core.workload import round_pow2
+from repro.sim import (
+    CalibratedCostModel,
+    CsvReplayTrace,
+    MarkovModulatedTrace,
+    PoissonTrace,
+    RooflineCostModel,
+    SimWorkload,
+    Simulator,
+    TenantSpec,
+    batch_key,
+    estimate_capacity_hz,
+    interference_matrix,
+    make_trace,
+    paper_sgemm_mix,
+    prefill_decode_mix,
+    simulate,
+)
+
+
+# --------------------------------------------------------------- shared pow2
+class TestRoundPow2:
+    def test_values(self):
+        assert [round_pow2(n) for n in (0, 1, 2, 3, 4, 5, 8, 9, 1023, 1024)] \
+            == [1, 1, 2, 4, 4, 8, 8, 16, 1024, 1024]
+
+    def test_one_definition_everywhere(self):
+        """The compile cache and the cost-model keys must share ONE pow2
+        helper — a live-measured (bucket, R) cost has to land in exactly
+        the bucket a simulated batch of that size looks up."""
+        from repro.core import superkernel
+
+        assert superkernel._round_pow2 is round_pow2
+        cache = superkernel.SuperKernelCache(ScheduleConfig(r_bucketing="pow2"))
+        for r in (1, 3, 5, 9):
+            assert cache._r_bucket(r) == round_pow2(r)
+
+
+# ------------------------------------------------------- config validation
+class TestScheduleConfigValidation:
+    def test_negative_window_rejected(self):
+        with pytest.raises(ValueError, match="batching_window_s"):
+            ScheduleConfig(batching_window_s=-0.001)
+
+    def test_negative_min_window_rejected(self):
+        with pytest.raises(ValueError, match="min_batching_window_s"):
+            ScheduleConfig(min_batching_window_s=-1.0)
+
+    def test_size_cap_below_one_rejected(self):
+        with pytest.raises(ValueError, match="max_superkernel_size"):
+            ScheduleConfig(max_superkernel_size=0)
+
+    def test_bad_pending_cap_rejected(self):
+        with pytest.raises(ValueError, match="max_pending_per_tenant"):
+            ScheduleConfig(max_pending_per_tenant=0)
+
+    def test_valid_boundaries_accepted(self):
+        ScheduleConfig(batching_window_s=0.0, max_superkernel_size=1,
+                       max_pending_per_tenant=1)
+
+
+# ------------------------------------------------------------------- traces
+class TestTraces:
+    def test_poisson_deterministic_ordered(self):
+        mix = paper_sgemm_mix(4)
+        a = list(PoissonTrace(mix, 1000.0, 500, seed=7))
+        b = list(PoissonTrace(mix, 1000.0, 500, seed=7))
+        assert a == b
+        assert len(a) == 500
+        ts = [ev.t_s for ev in a]
+        assert ts == sorted(ts)
+        assert list(PoissonTrace(mix, 1000.0, 500, seed=8)) != a
+
+    def test_mmpp_ordered_and_bursty(self):
+        mix = paper_sgemm_mix(2)
+        evs = list(MarkovModulatedTrace(mix, calm_hz=100.0, burst_hz=5000.0,
+                                        events=2000, mean_calm_s=0.5,
+                                        mean_burst_s=0.1, seed=0))
+        ts = np.array([ev.t_s for ev in evs])
+        assert (np.diff(ts) >= 0).all()
+        gaps = np.diff(ts)
+        # burstiness: inter-arrival dispersion far above Poisson's CV=1
+        assert gaps.std() / gaps.mean() > 1.5
+
+    @pytest.mark.parametrize("process", ["poisson", "mmpp", "diurnal", "flash"])
+    def test_factory_event_counts(self, process):
+        mix = paper_sgemm_mix(3)
+        evs = list(make_trace(process, mix, 2000.0, 300, seed=1))
+        assert len(evs) == 300
+        ts = [ev.t_s for ev in evs]
+        assert ts == sorted(ts)
+
+    def test_merge_composes_in_time_order(self):
+        mix_a, mix_b = paper_sgemm_mix(2), prefill_decode_mix(1)
+        merged = PoissonTrace(mix_a, 500.0, 100, seed=0) \
+            + PoissonTrace(mix_b, 500.0, 100, seed=1)
+        evs = list(merged)
+        assert len(evs) == 200
+        ts = [ev.t_s for ev in evs]
+        assert ts == sorted(ts)
+
+    def test_csv_replay(self):
+        mix = paper_sgemm_mix(2)
+        rows = ["# t_s,spec", "0.001,0", f"0.002,{mix[1].name}", "0.004,0"]
+        evs = list(CsvReplayTrace(mix, rows))
+        assert [ev.t_s for ev in evs] == [0.001, 0.002, 0.004]
+        assert [ev.spec.tenant_id for ev in evs] == [0, 1, 0]
+
+    def test_csv_replay_rejects_time_travel(self):
+        mix = paper_sgemm_mix(1)
+        with pytest.raises(ValueError, match="non-decreasing"):
+            list(CsvReplayTrace(mix, ["0.002,0", "0.001,0"]))
+
+    def test_weights_shape_arrival_shares(self):
+        mix = prefill_decode_mix(1, decode_per_prefill=64.0)
+        evs = list(PoissonTrace(mix, 1000.0, 4000, seed=0))
+        decodes = sum(1 for ev in evs if ev.spec.kind == "decode")
+        assert decodes / len(evs) > 0.9  # 64:1 weighting dominates
+
+
+# -------------------------------------------------------------- cost models
+def _batch(mix, n):
+    return [SimWorkload(mix[i % len(mix)], mix[i % len(mix)].cost)
+            for i in range(n)]
+
+
+class TestRooflineCostModel:
+    def test_strategy_ordering_guaranteed_per_batch(self):
+        """The prior must price every batch with the paper's ordering."""
+        for mix in (paper_sgemm_mix(6), prefill_decode_mix(3)):
+            for n in (1, 2, 7, 32):
+                batch = _batch(mix, n)
+                t = {s: RooflineCostModel(strategy=s)(batch)
+                     for s in ("time_only", "space_only", "space_time")}
+                assert t["time_only"] > t["space_only"] > t["space_time"] > 0
+
+    def test_rejects_unknown_strategy(self):
+        with pytest.raises(ValueError, match="strategy"):
+            RooflineCostModel(strategy="warp_speed")
+
+
+class TestCalibratedCostModel:
+    def test_prior_fallback_then_fitted(self):
+        mix = paper_sgemm_mix(2)
+        batch = _batch(mix, 4)
+        model = CalibratedCostModel(ewma_alpha=0.5)
+        prior = model(batch)
+        assert prior == pytest.approx(RooflineCostModel()(batch))
+        model.observe(batch, 1e-3)
+        assert model(batch) == pytest.approx(1e-3)
+        model.observe(batch, 2e-3)
+        assert model(batch) == pytest.approx(1.5e-3)  # EWMA, alpha=0.5
+        assert model.coverage(batch)
+
+    def test_pow2_key_shares_compiled_variant_bucket(self):
+        mix = paper_sgemm_mix(1)
+        assert batch_key(_batch(mix, 5)) == batch_key(_batch(mix, 8))
+        assert batch_key(_batch(mix, 5)) != batch_key(_batch(mix, 16))
+
+    def test_json_roundtrip(self, tmp_path):
+        mix = paper_sgemm_mix(3)
+        model = CalibratedCostModel()
+        model.observe(_batch(mix, 4), 2e-4)
+        model.observe(_batch(mix, 16), 9e-4)
+        path = str(tmp_path / "costs.json")
+        model.save(path)
+        loaded = CalibratedCostModel.load(path)
+        assert loaded.table == model.table
+        assert loaded.counts == model.counts
+        assert loaded(_batch(mix, 4)) == pytest.approx(2e-4)
+
+    def test_scheduler_on_dispatch_tap(self):
+        """A live scheduler feeds the calibrator through on_dispatch."""
+        from repro.core import DynamicSpaceTimeScheduler, VirtualClock
+
+        model = CalibratedCostModel()
+        clock = VirtualClock()
+        sched = DynamicSpaceTimeScheduler(
+            ScheduleConfig(batching_window_s=0.0),
+            clock=clock,
+            cost_model=lambda batch: 5e-4,
+            on_dispatch=model.observe,
+        )
+        mix = paper_sgemm_mix(1)
+        for w in _batch(mix, 3):
+            sched.submit(w)
+        sched.flush()
+        key = batch_key(_batch(mix, 3))
+        assert model.table[key] == pytest.approx(5e-4)
+
+
+# ---------------------------------------------------------------- simulator
+SCHED = ScheduleConfig(batching_window_s=0.001, max_superkernel_size=32)
+
+
+def _run(events=3000, seed=0, policy="fixed", scale=1.0, rate_hz=None, mix=None):
+    mix = mix or paper_sgemm_mix(6)
+    base = RooflineCostModel(strategy="space_time")
+    rate = rate_hz or 0.7 * estimate_capacity_hz(mix, base)
+    model = base if scale == 1.0 else (lambda b: scale * base(b))
+    return simulate(
+        PoissonTrace(mix, rate, events, seed=seed),
+        ScheduleConfig(batching_window_s=0.001, max_superkernel_size=32,
+                       batching_policy=policy),
+        model,
+    )
+
+
+class TestSimulator:
+    def test_all_events_complete(self):
+        m = _run(events=2000)
+        assert m.completed == 2000
+        assert m.summary()["dispatches"] > 0
+        assert 0.0 < m.utilization <= 1.0
+
+    @pytest.mark.parametrize("policy", ["fixed", "slo_adaptive"])
+    def test_same_seed_bit_identical_metrics_json(self, policy):
+        a = _run(seed=3, policy=policy).to_json()
+        b = _run(seed=3, policy=policy).to_json()
+        assert a == b  # byte-identical: the determinism contract
+        assert json.loads(a)["summary"]["completed"] == 3000.0
+
+    def test_different_seed_differs(self):
+        assert _run(seed=1).to_json() != _run(seed=2).to_json()
+
+    def test_window_dispatch_happens_between_arrivals(self):
+        """A lone item must dispatch at oldest+window on the virtual
+        timeline, not get quantized to the next (late) arrival."""
+        spec = paper_sgemm_mix(1)[0]
+        rows = ["0.000,0", "0.100,0"]  # second arrival long after window
+        m = simulate(CsvReplayTrace([spec], rows),
+                     ScheduleConfig(batching_window_s=0.002),
+                     RooflineCostModel())
+        first_lat = float(m.lat[0])
+        assert first_lat == pytest.approx(0.002, abs=1e-4)
+
+    def test_overload_stamps_true_arrival_times(self):
+        """Under overload the virtual clock runs ahead of arrivals;
+        latency must include the queueing delay (grow without bound),
+        not reset at each dispatch."""
+        mix = paper_sgemm_mix(2)
+        cap = estimate_capacity_hz(mix, RooflineCostModel())
+        m = _run(events=4000, rate_hz=5.0 * cap, mix=mix)
+        assert m.completed == 4000
+        third = 4000 // 3
+        assert m.lat[-third:].mean() > 3.0 * m.lat[:third].mean()
+
+    def test_attainment_monotone_in_offered_load(self):
+        """Scaling every dispatch cost up scales offered load up; SLO
+        attainment must not improve (plain version of the hypothesis
+        property below)."""
+        att = [_run(events=2500, seed=4, scale=s).slo_attainment
+               for s in (0.5, 1.0, 2.0, 4.0, 8.0)]
+        for lo, hi in zip(att, att[1:]):
+            assert hi <= lo + 1e-12
+
+    def test_strategy_throughput_ordering_end_to_end(self):
+        mix = paper_sgemm_mix(6)
+        cap = estimate_capacity_hz(mix, RooflineCostModel())
+        tput = {}
+        for strat in ("space_time", "space_only", "time_only"):
+            m = simulate(PoissonTrace(mix, 2.0 * cap, 4000, seed=0),
+                         SCHED, RooflineCostModel(strategy=strat))
+            tput[strat] = m.throughput_cost_per_s
+        assert tput["space_time"] > tput["space_only"] > tput["time_only"]
+
+    def test_serving_mix_runs_with_per_kind_metrics(self):
+        m = _run(events=2000, mix=prefill_decode_mix(3))
+        kinds = m.per_kind()
+        assert set(kinds) == {"prefill", "decode"}
+        for d in kinds.values():
+            assert d["mean_s"] > 0.0
+            assert 0.0 <= d["slo_attainment"] <= 1.0
+
+
+# ------------------------------------------------------------------ metrics
+class TestMetrics:
+    def test_bench_rows_schema(self):
+        rows = _run(events=1000).bench_rows("sim/test")
+        assert all(len(r) == 3 for r in rows)
+        names = [r[0] for r in rows]
+        assert "sim/test/p95" in names and "sim/test/attainment" in names
+
+    def test_interference_matrix_shape_and_diag(self):
+        specs = paper_sgemm_mix(3)
+
+        def run_subset(sub):
+            return simulate(PoissonTrace(sub, 50_000.0, 400, seed=0),
+                            SCHED, RooflineCostModel())
+
+        M = interference_matrix(run_subset, specs)
+        assert M.shape == (3, 3)
+        assert np.allclose(np.diag(M), 1.0)
+        assert (M > 0).all()
+
+    def test_interference_matrix_rejects_duplicate_tenants(self):
+        """Serving mixes carry two streams per tenant; the matrix is
+        keyed per tenant, so duplicates must be rejected not blended."""
+        specs = prefill_decode_mix(2)  # 4 specs over 2 tenant_ids
+        with pytest.raises(ValueError, match="unique tenant_ids"):
+            interference_matrix(lambda sub: None, specs)
+
+
+# --------------------------------------------------- hypothesis (optional)
+def test_attainment_monotone_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    settings.register_profile("sim", max_examples=15, deadline=None)
+    settings.load_profile("sim")
+
+    @given(
+        seed=st.integers(0, 50),
+        scales=st.lists(st.floats(0.25, 16.0), min_size=2, max_size=4),
+    )
+    def prop(seed, scales):
+        att = [_run(events=800, seed=seed, scale=s).slo_attainment
+               for s in sorted(scales)]
+        for lo, hi in zip(att, att[1:]):
+            assert hi <= lo + 1e-12
+    prop()
