@@ -1,0 +1,124 @@
+"""Bench-regression gate: compare a fresh BENCH_*.json against a committed
+baseline and fail on real performance regressions.
+
+The simulators are deterministic per seed, so in practice current ==
+baseline byte-for-byte on an unchanged scheduler; the tolerance exists so
+*intentional* small policy shifts don't demand a baseline refresh on every
+PR, while a >10% tail-latency or goodput regression fails CI.
+
+Direction-aware: a row regresses only in its bad direction —
+
+    lower is better    .../p50  .../p95  .../p99        (latency)
+    higher is better   .../attainment  .../goodput
+
+Everything else (utilization, imbalance, cold fraction, spread, ...) is
+informational: tracked in the JSON, never gated — those metrics trade
+off against the gated ones by design (e.g. cheaper dispatches LOWER
+utilization while improving goodput), so gating them would block
+improvements.
+
+Baselines are refreshed by re-running the sweep with the SAME arguments
+CI uses and committing the output over the old file:
+
+    PYTHONPATH=src python benchmarks/sim_sweep.py   --events 5000 \
+        --json benchmarks/baselines/BENCH_baseline_sim_sweep.json
+    PYTHONPATH=src python benchmarks/fleet_sweep.py --events 5000 \
+        --replicas 4 --json benchmarks/baselines/BENCH_baseline_fleet_sweep.json
+
+    python benchmarks/check_regression.py \
+        --baseline benchmarks/baselines/BENCH_baseline_sim_sweep.json \
+        --current BENCH_sim_sweep.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+LOWER_BETTER = ("/p50", "/p95", "/p99")
+HIGHER_BETTER = ("/attainment", "/goodput")
+
+# below this, a metric is noise-floor: relative comparison of two nearly
+# zero values (e.g. 0.0001% attainment) would gate on float dust
+ABS_FLOOR = 1e-9
+
+
+def _rows(doc: dict) -> Dict[str, float]:
+    return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
+
+
+def _direction(name: str) -> int:
+    """+1 = higher is better, -1 = lower is better, 0 = ungated."""
+    if name.endswith(LOWER_BETTER):
+        return -1
+    if name.endswith(HIGHER_BETTER):
+        return +1
+    return 0
+
+
+def compare(baseline: Dict[str, float], current: Dict[str, float],
+            tolerance: float) -> Tuple[List[str], int]:
+    """Return (regression messages, number of gated rows compared)."""
+    problems: List[str] = []
+    gated = 0
+    for name, base in sorted(baseline.items()):
+        sign = _direction(name)
+        if sign == 0:
+            continue
+        if name not in current:
+            problems.append(f"gated row missing from current run: {name}")
+            continue
+        gated += 1
+        cur = current[name]
+        if abs(base) <= ABS_FLOOR and abs(cur) <= ABS_FLOOR:
+            continue
+        denom = max(abs(base), ABS_FLOOR)
+        delta = (cur - base) / denom
+        if sign * delta < -tolerance:
+            kind = "worse" if sign > 0 else "slower"
+            problems.append(
+                f"{name}: {base:.6g} -> {cur:.6g} "
+                f"({delta * 100.0:+.1f}%, {kind} by more than "
+                f"{tolerance * 100.0:.0f}%)")
+    return problems, gated
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_baseline_*.json")
+    ap.add_argument("--current", required=True,
+                    help="freshly produced BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative slack in the bad direction "
+                         "(default 0.10 = 10%%)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as fh:
+        base_doc = json.load(fh)
+    with open(args.current) as fh:
+        cur_doc = json.load(fh)
+    if base_doc.get("benchmark") != cur_doc.get("benchmark"):
+        print(f"REGRESSION GATE: comparing different benchmarks "
+              f"({base_doc.get('benchmark')!r} vs {cur_doc.get('benchmark')!r})",
+              file=sys.stderr)
+        sys.exit(2)
+
+    problems, gated = compare(_rows(base_doc), _rows(cur_doc), args.tolerance)
+    bench = base_doc.get("benchmark", "?")
+    if problems:
+        print(f"REGRESSION GATE [{bench}]: {len(problems)} problem(s) over "
+              f"{gated} gated rows", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        print("If the change is intentional, refresh the baseline (see "
+              "module docstring) and commit it.", file=sys.stderr)
+        sys.exit(1)
+    print(f"regression gate [{bench}]: {gated} gated rows within "
+          f"{args.tolerance * 100.0:.0f}% of baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -66,7 +66,8 @@ class DynamicSpaceTimeScheduler:
         clock: Optional[Clock] = None,
         policy: Optional[BatchingPolicy] = None,
         cost_model: Optional[Callable[[Sequence], float]] = None,
-        on_dispatch: Optional[Callable[[List, float], None]] = None,
+        on_dispatch: Optional[Callable[[List, float, Optional[int]], None]] = None,
+        replica_id: Optional[int] = None,
     ):
         self.schedule = schedule or ScheduleConfig()
         self.clock = clock or WallClock()
@@ -74,10 +75,14 @@ class DynamicSpaceTimeScheduler:
         # Maps a dispatched batch to modeled seconds; a VirtualClock then
         # advances by it, making completion times deterministic.
         self.cost_model = cost_model
-        # Called with (batch, elapsed_s) after every super-dispatch — the
-        # calibration tap a CalibratedCostModel (repro.sim.costmodel)
-        # learns per-(bucket, pow2-R) dispatch costs through.
+        # Called with (batch, elapsed_s, replica_id) after every
+        # super-dispatch — the calibration tap a CalibratedCostModel
+        # (repro.sim.costmodel) learns per-(bucket, pow2-R) dispatch costs
+        # through. ``replica_id`` identifies which fleet replica dispatched
+        # (None for a solo scheduler), so fleet-wide calibration can keep
+        # per-replica tables apart.
         self.on_dispatch = on_dispatch
+        self.replica_id = replica_id
         self.queue = WorkQueue()
         self.cache = SuperKernelCache(self.schedule)
         self.monitor = LatencyMonitor(
@@ -192,7 +197,7 @@ class DynamicSpaceTimeScheduler:
         self.stats.total_cost += sum(float(getattr(p, "cost", 0.0)) for p in batch)
         self.stats.busy_time_s += t1 - t0
         if self.on_dispatch is not None:
-            self.on_dispatch(batch, t1 - t0)
+            self.on_dispatch(batch, t1 - t0, self.replica_id)
 
         for p, out in zip(batch, outs):
             p.result = out

@@ -5,24 +5,43 @@ arrival-process generators (``traces``) drive the REAL scheduling core on
 a virtual clock (``simulator``), with dispatches priced by an analytical
 roofline prior or an online-calibrated measured-cost table (``costmodel``)
 and outcomes reduced to SLO/latency/goodput/isolation metrics with
-deterministic JSON export (``metrics``). Policy sweeps over millions of
+deterministic JSON export (``metrics``). ``fleet`` + ``router`` scale the
+same machinery to N replicas behind a routing policy, with per-replica
+compile-cache cold-start accounting. Policy sweeps over millions of
 events run in seconds on CPU — and in CI.
 """
 
 from repro.sim.costmodel import (  # noqa: F401
     STRATEGIES,
     CalibratedCostModel,
+    ColdStartCostModel,
     RooflineCostModel,
     batch_key,
     estimate_capacity_hz,
 )
+from repro.sim.fleet import FleetSimulator, simulate_fleet  # noqa: F401
 from repro.sim.metrics import (  # noqa: F401
+    FleetMetrics,
     MetricsAccumulator,
     SimMetrics,
     interference_matrix,
     to_bench_json,
 )
-from repro.sim.simulator import SimWorkload, Simulator, simulate  # noqa: F401
+from repro.sim.router import (  # noqa: F401
+    ROUTERS,
+    JoinShortestQueueRouter,
+    LeastEstimatedCostRouter,
+    RoundRobinRouter,
+    Router,
+    TenantAffinityRouter,
+    make_router,
+)
+from repro.sim.simulator import (  # noqa: F401
+    ReplicaPump,
+    SimWorkload,
+    Simulator,
+    simulate,
+)
 from repro.sim.traces import (  # noqa: F401
     Arrival,
     CsvReplayTrace,
@@ -33,6 +52,7 @@ from repro.sim.traces import (  # noqa: F401
     PoissonTrace,
     TenantSpec,
     Trace,
+    fleet_sgemm_mix,
     make_trace,
     paper_sgemm_mix,
     prefill_decode_mix,

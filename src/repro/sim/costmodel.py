@@ -5,7 +5,7 @@ super-dispatch of merged workloads; the scheduler advances its
 ``VirtualClock`` by that amount, which is what turns the live pump into a
 deterministic simulator (see ``core.scheduler``).
 
-Two models, designed to compose:
+Three models, designed to compose:
 
 ``RooflineCostModel``
     Analytical prior over a ``HardwareSpec`` (the reusable record the
@@ -38,12 +38,21 @@ Two models, designed to compose:
     compile cache, so a measurement made on a live (bucket, R) dispatch
     resolves for exactly the simulated batches that would have hit that
     compiled variant.
+
+``ColdStartCostModel``
+    Wraps either of the above with per-instance compile-cache accounting:
+    the first dispatch per (bucket, pow2-R) key pays an extra ``compile_s``
+    (XLA compilation of that super-kernel variant), later dispatches reuse
+    the warm variant. One instance per fleet replica models per-replica
+    compile caches — the state that makes warm-cache-affinity routing
+    trade against load balance (see ``repro.sim.fleet``).
 """
 
 from __future__ import annotations
 
 import json
 import os
+from array import array
 from typing import Callable, Dict, Optional, Sequence
 
 from repro.core.workload import round_pow2
@@ -102,6 +111,15 @@ class RooflineCostModel:
         # space_time / exclusive: one wide kernel at the roofline
         return s.dispatch_overhead_s + fill + roof
 
+    def item_s(self, w) -> float:
+        """Marginal seconds of adding ``w`` to an already-forming merged
+        batch: the incremental roofline term only — dispatch, fill, and
+        (for a cold key) compile are paid by the batch regardless. Upper
+        bounds ``cost(batch + w) - cost(batch)`` for the merged
+        strategies; routers use it to price joining a pending bucket."""
+        s = self.spec
+        return max(s.t_compute(_flops(w)), s.t_memory(_bytes(w)))
+
 
 def batch_key(batch: Sequence) -> str:
     """Calibration key of one super-dispatch: (bucket, pow2-R) as a string.
@@ -125,6 +143,13 @@ class CalibratedCostModel:
         model.save("costs.json")
         sim_model = CalibratedCostModel.load("costs.json")
         Simulator(..., cost_model=sim_model)  # prices batches from data
+
+    Warm-up: a key's first ``1/alpha`` observations are folded in at
+    ``alpha_eff = 1/count`` (a plain cumulative mean), after which the fit
+    settles into steady-state EWMA at ``alpha``. Observation counts are
+    part of the persisted state: a loaded model resumes steady-state EWMA
+    on its warm keys instead of letting one fresh sample overwrite a
+    long-fitted value.
     """
 
     def __init__(
@@ -140,18 +165,23 @@ class CalibratedCostModel:
         self.counts: Dict[str, int] = {}
 
     # --------------------------------------------------------------- fitting
-    def observe(self, batch: Sequence, seconds: float) -> None:
+    def observe(self, batch: Sequence, seconds: float,
+                replica_id: Optional[int] = None) -> None:
         """Fold one measured dispatch into the fit (scheduler ``on_dispatch``
-        signature, so it plugs in directly)."""
+        signature, so it plugs in directly; ``replica_id`` is accepted for
+        tap compatibility — the table is fleet-wide)."""
         if not batch or seconds < 0.0:
             return
         key = batch_key(batch)
+        count = self.counts.get(key, 0) + 1
+        self.counts[key] = count
         prev = self.table.get(key)
-        self.table[key] = (
-            seconds if prev is None
-            else self.alpha * seconds + (1.0 - self.alpha) * prev
-        )
-        self.counts[key] = self.counts.get(key, 0) + 1
+        if prev is None:
+            self.table[key] = seconds
+            return
+        # cumulative mean while count < 1/alpha, steady-state EWMA after
+        alpha_eff = max(self.alpha, 1.0 / count)
+        self.table[key] = alpha_eff * seconds + (1.0 - alpha_eff) * prev
 
     # --------------------------------------------------------------- pricing
     def __call__(self, batch: Sequence) -> float:
@@ -196,6 +226,86 @@ class CalibratedCostModel:
              ) -> "CalibratedCostModel":
         with open(path) as fh:
             return cls.from_json(fh.read(), prior=prior)
+
+
+class ColdStartCostModel:
+    """Compile-cache cold-start accounting over a base cost model.
+
+    The live scheduler's ``SuperKernelCache`` jit-compiles one super-kernel
+    variant per (bucket, pow2-R); the FIRST dispatch that hits a variant
+    pays XLA compilation, later ones reuse it. This wrapper models that:
+    the first dispatch per ``batch_key`` adds ``compile_s``; the key is
+    then *warm* and subsequent dispatches pay only the base cost.
+
+    Each fleet replica wraps the (shared, stateless) base model in its OWN
+    instance — compile caches are per-process state, so a fleet of N
+    replicas pays up to N compiles per variant. That is exactly what makes
+    routing interesting: tenant-affinity keeps tenants on replicas that
+    already compiled their shapes, pure load balancing spreads every shape
+    onto every replica and pays the full N-fold compile bill.
+
+    Every dispatch is also logged as ``(virtual time, was_cold)`` so fleet
+    metrics can report the cold-start fraction and its decay over the
+    trace (warm-up curve).
+    """
+
+    def __init__(
+        self,
+        base: Optional[Callable[[Sequence], float]] = None,
+        compile_s: float = 1e-3,
+        clock=None,
+    ):
+        if compile_s < 0.0:
+            raise ValueError("compile_s must be >= 0")
+        self.base = base or RooflineCostModel()
+        self.compile_s = float(compile_s)
+        self.clock = clock
+        self._warm: set = set()
+        self._warm_buckets: set = set()
+        self.dispatch_times = array("d")
+        self.dispatch_cold = array("b")
+
+    def __call__(self, batch: Sequence) -> float:
+        key = batch_key(batch)
+        cold = key not in self._warm
+        if cold:
+            self._warm.add(key)
+            self._warm_buckets.add(getattr(batch[0], "bucket", None))
+        self.dispatch_times.append(
+            self.clock.now() if self.clock is not None else 0.0)
+        self.dispatch_cold.append(1 if cold else 0)
+        return self.base(batch) + (self.compile_s if cold else 0.0)
+
+    # ------------------------------------------------------- routing signals
+    def bucket_warm(self, bucket) -> bool:
+        """True once ANY variant of this bucket has compiled here — the
+        affinity signal routers use (R varies dispatch to dispatch, the
+        bucket is the stable part of the key)."""
+        return bucket in self._warm_buckets
+
+    def estimate(self, batch: Sequence) -> float:
+        """Price a batch WITHOUT mutating the warm set (what a router asks
+        when weighing candidate replicas)."""
+        cold = getattr(batch[0], "bucket", None) not in self._warm_buckets
+        return self.base(batch) + (self.compile_s if cold else 0.0)
+
+    def item_s(self, w) -> float:
+        """Marginal cost of joining an already-pending batch of ``w``'s
+        bucket: no compile term — the forming batch pays any compile once
+        for everyone riding it."""
+        base_item = getattr(self.base, "item_s", None)
+        if base_item is not None:
+            return base_item(w)
+        return self.base((w,))
+
+    # ------------------------------------------------------------- reporting
+    @property
+    def cold_dispatches(self) -> int:
+        return int(sum(self.dispatch_cold))
+
+    @property
+    def dispatches(self) -> int:
+        return len(self.dispatch_cold)
 
 
 def estimate_capacity_hz(

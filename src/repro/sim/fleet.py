@@ -1,0 +1,192 @@
+"""Multi-replica fleet simulation: N real schedulers behind a router.
+
+The replica-scaling half of the paper's story (Fig. 5 counts how many
+replicas FIT; this answers what a fleet of them DOES under load): each
+replica is a full ``ReplicaPump`` — the real ``DynamicSpaceTimeScheduler``
+on its own ``VirtualClock`` with its own compile-cache cold-start state —
+and a pluggable ``Router`` (``repro.sim.router``) assigns every arrival
+to one of them.
+
+The fleet event loop merges per-replica ripeness instants into ONE global
+timeline: between trace arrivals it repeatedly finds the replica with the
+earliest next ripeness instant and pumps exactly that replica there, so
+cross-replica event ordering is exact, not quantized per replica. Routing
+decisions therefore observe every replica's true state as of the
+arrival's trace time.
+
+Cold starts are what couple routing to scheduling: each replica wraps the
+shared base cost model in its own ``ColdStartCostModel``, so the first
+dispatch of a (bucket, pow2-R) variant on a given replica pays a compile
+term — spreading a tenant across the fleet multiplies compiles, pinning
+it concentrates load. That is the JSQ-vs-affinity trade the routers and
+``benchmarks/fleet_sweep.py`` measure.
+
+Determinism: routers are pure functions of replica state, replica state
+is driven by seeded traces and virtual clocks — one seed, byte-identical
+fleet metrics JSON, same contract as the solo simulator.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.config import ScheduleConfig
+from repro.core.clock import VirtualClock
+from repro.sim.costmodel import ColdStartCostModel, RooflineCostModel
+from repro.sim.metrics import FleetMetrics, MetricsAccumulator
+from repro.sim.router import Router, make_router
+from repro.sim.simulator import ReplicaPump, SimWorkload
+from repro.sim.traces import Arrival, Trace
+
+
+class FleetSimulator:
+    """N replicas of the real scheduler behind a router, one timeline.
+
+    ``cost_model`` is the SHARED stateless base (roofline or calibrated);
+    when ``compile_s > 0`` each replica wraps it in its own
+    ``ColdStartCostModel`` — per-replica warm caches. ``compile_s=0``
+    turns cold-start modeling off (replicas still price work through the
+    base model).
+    """
+
+    def __init__(
+        self,
+        replicas: int,
+        router: Union[Router, str] = "jsq",
+        schedule: Optional[ScheduleConfig] = None,
+        cost_model: Optional[Callable[[Sequence], float]] = None,
+        compile_s: float = 1e-3,
+        start_s: float = 0.0,
+    ):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        self.router = make_router(router) if isinstance(router, str) else router
+        self.start_s = float(start_s)
+        base = cost_model or RooflineCostModel()
+        self.pumps: List[ReplicaPump] = []
+        for i in range(replicas):
+            clock = VirtualClock(start_s)
+            model: Callable[[Sequence], float] = base
+            if compile_s > 0.0:
+                model = ColdStartCostModel(base, compile_s=compile_s,
+                                           clock=clock)
+            pump = ReplicaPump(schedule=schedule, cost_model=model,
+                               clock=clock, replica_id=i)
+            pump.track_inflight = True  # routers read occupancy in fleet time
+            self.pumps.append(pump)
+        self.routed_counts = [0] * replicas
+
+    # ------------------------------------------------------------ event loop
+    def _drain_until(self, t_limit: float) -> None:
+        """Merged global timeline: pump whichever replica ripens earliest,
+        repeatedly, until no replica ripens before ``t_limit``.
+
+        A replica whose ripeness estimate fails to dispatch (slack-aware
+        window shrank underneath it) is stalled until the next arrival —
+        the same per-replica semantics as the solo drain loop, without
+        letting one stalled replica block the others.
+        """
+        pumps = self.pumps
+        stalled = 0  # bitmask — replica counts are small
+        while True:
+            best_i, best_t = -1, t_limit
+            for i, p in enumerate(pumps):
+                if stalled & (1 << i):
+                    continue
+                t = p.next_ripe_time()
+                if t is not None and t < best_t:
+                    best_i, best_t = i, t
+            if best_i < 0:
+                return
+            if not pumps[best_i].pump_at(best_t):
+                stalled |= 1 << best_i
+
+    def run(self, trace: Union[Trace, Iterable[Arrival]]) -> FleetMetrics:
+        pumps, router = self.pumps, self.router
+        fleet_acc = MetricsAccumulator()
+        replica_accs = [MetricsAccumulator() for _ in pumps]
+        for p, acc in zip(pumps, replica_accs):
+            p.accs = [fleet_acc, acc]
+        t_start = self.start_s
+
+        for t_s, spec, cost in trace:
+            self._drain_until(t_s)
+            idx = router.route(spec, pumps, t_s)
+            w = SimWorkload(spec, cost)
+            w.est_s = pumps[idx].estimate_item_s(w)
+            if pumps[idx].submit(w, t_s):
+                self.routed_counts[idx] += 1
+
+        # tail: keep merging ripeness instants until every queue is dry,
+        # then force-flush whatever the estimates could not ripen
+        while any(len(p.scheduler.queue) for p in pumps):
+            before = sum(len(p.scheduler.queue) for p in pumps)
+            self._drain_until(float("inf"))
+            if sum(len(p.scheduler.queue) for p in pumps) == before:
+                for p in pumps:
+                    if len(p.scheduler.queue):
+                        p._absorb(p.scheduler.flush())
+                break
+
+        # fleet horizon: the makespan across replicas; every replica's
+        # utilization is reported against it so the spread is meaningful
+        horizon = max(p.clock.now() for p in pumps) - t_start
+        merged = self._freeze_merged(fleet_acc, horizon)
+        per_replica = [p.freeze(acc, sim_duration_s=horizon)
+                       for p, acc in zip(pumps, replica_accs)]
+        cold_times, cold_flags = self._cold_series()
+        return FleetMetrics(
+            merged=merged,
+            per_replica=per_replica,
+            routed_counts=list(self.routed_counts),
+            router=self.router.name,
+            cold_times=cold_times,
+            cold_flags=cold_flags,
+        )
+
+    # ------------------------------------------------------------- internals
+    def _freeze_merged(self, acc: MetricsAccumulator,
+                       horizon: float):
+        stats = [p.scheduler.stats for p in self.pumps]
+        return acc.freeze(
+            sim_duration_s=horizon,
+            busy_time_s=sum(s.busy_time_s for s in stats),
+            dispatches=sum(s.dispatches for s in stats),
+            rejected=sum(s.rejected for s in stats),
+            evicted_tenants=sum(len(p.scheduler.evicted) for p in self.pumps),
+        )
+
+    def _cold_series(self):
+        """Concatenated (time, was_cold) dispatch series across replicas,
+        sorted by time (stable, so equal instants keep replica order —
+        deterministic)."""
+        times: List[np.ndarray] = []
+        flags: List[np.ndarray] = []
+        for p in self.pumps:
+            m = p.cost_model
+            if isinstance(m, ColdStartCostModel):
+                times.append(np.asarray(m.dispatch_times, np.float64))
+                flags.append(np.asarray(m.dispatch_cold, np.int64))
+        if not times:
+            return np.zeros(0, np.float64), np.zeros(0, np.int64)
+        t = np.concatenate(times)
+        f = np.concatenate(flags)
+        order = np.argsort(t, kind="stable")
+        return t[order], f[order]
+
+
+def simulate_fleet(
+    trace: Union[Trace, Iterable[Arrival]],
+    replicas: int,
+    router: Union[Router, str] = "jsq",
+    schedule: Optional[ScheduleConfig] = None,
+    cost_model: Optional[Callable[[Sequence], float]] = None,
+    compile_s: float = 1e-3,
+) -> FleetMetrics:
+    """One-shot convenience wrapper: fresh fleet, one trace, metrics."""
+    return FleetSimulator(
+        replicas, router=router, schedule=schedule, cost_model=cost_model,
+        compile_s=compile_s,
+    ).run(trace)

@@ -191,7 +191,128 @@ class SimMetrics:
         return json.dumps(self.to_dict(), indent=2, sort_keys=True)
 
 
-def to_bench_json(name: str, sections: Dict[str, SimMetrics],
+class FleetMetrics:
+    """Fleet-level simulation outcome: the merged (fleet-wide) metrics
+    plus per-replica breakdowns and the routing/cold-start signals the
+    single-replica ``SimMetrics`` cannot express.
+
+    Duck-types ``SimMetrics``'s export surface (``summary`` /
+    ``bench_rows`` / ``to_dict`` / ``to_json``) so ``to_bench_json`` and
+    the CI regression gate consume fleet sections unchanged.
+
+    ``cold_times`` / ``cold_flags`` are the concatenated per-dispatch
+    ``(virtual seconds, was_cold)`` series across replicas — the warm-up
+    curve; ``cold_fraction_halves()`` splits it at the fleet horizon
+    midpoint (cold fraction must decay as caches warm).
+    """
+
+    def __init__(self, merged: SimMetrics, per_replica: List[SimMetrics],
+                 routed_counts: Sequence[int], router: str,
+                 cold_times: np.ndarray, cold_flags: np.ndarray):
+        self.merged = merged
+        self.per_replica = per_replica
+        self.routed_counts = np.asarray(routed_counts, np.int64)
+        self.router = router
+        self.cold_times = np.asarray(cold_times, np.float64)
+        self.cold_flags = np.asarray(cold_flags, np.int64)
+
+    @property
+    def replicas(self) -> int:
+        return len(self.per_replica)
+
+    # ------------------------------------------------------- fleet signals
+    @property
+    def utilization_spread(self) -> float:
+        """max - min per-replica utilization (0 = perfectly even work)."""
+        utils = [m.utilization for m in self.per_replica]
+        return float(max(utils) - min(utils)) if utils else 0.0
+
+    @property
+    def routing_imbalance(self) -> float:
+        """Coefficient of variation of per-replica routed arrival counts
+        (0 = perfectly balanced; round-robin's floor)."""
+        c = self.routed_counts.astype(np.float64)
+        if c.size == 0 or c.mean() == 0.0:
+            return 0.0
+        return float(c.std() / c.mean())
+
+    @property
+    def cold_start_fraction(self) -> float:
+        """Fraction of all fleet dispatches that paid a compile."""
+        if self.cold_flags.size == 0:
+            return 0.0
+        return float(self.cold_flags.mean())
+
+    def cold_fraction_halves(self) -> Tuple[float, float]:
+        """Cold-dispatch fraction in the first vs second half of the fleet
+        horizon — the warm-up decay the tests pin."""
+        if self.cold_times.size == 0:
+            return 0.0, 0.0
+        mid = (float(self.cold_times.min()) + float(self.cold_times.max())) / 2.0
+        early = self.cold_times <= mid
+        first = self.cold_flags[early]
+        second = self.cold_flags[~early]
+        return (float(first.mean()) if first.size else 0.0,
+                float(second.mean()) if second.size else 0.0)
+
+    # ------------------------------------------------------------- exports
+    def summary(self) -> Dict[str, float]:
+        out = self.merged.summary()
+        first, second = self.cold_fraction_halves()
+        out.update({
+            # merged utilization clamps Σbusy/horizon at 1.0 — meaningless
+            # for N > 1; report the per-replica mean instead
+            "utilization": float(
+                np.mean([m.utilization for m in self.per_replica])
+            ) if self.per_replica else 0.0,
+            "replicas": float(self.replicas),
+            "routing_imbalance": self.routing_imbalance,
+            "utilization_spread": self.utilization_spread,
+            "cold_start_fraction": self.cold_start_fraction,
+            "cold_fraction_first_half": first,
+            "cold_fraction_second_half": second,
+        })
+        return out
+
+    def bench_rows(self, prefix: str) -> List[Tuple[str, float, str]]:
+        s = self.summary()
+        rows = [
+            (f"{prefix}/p50", s["p50_s"] * 1e6, "us latency"),
+            (f"{prefix}/p95", s["p95_s"] * 1e6, "us latency"),
+            (f"{prefix}/p99", s["p99_s"] * 1e6, "us latency"),
+            (f"{prefix}/attainment", s["slo_attainment"] * 100.0, "pct SLO met"),
+            (f"{prefix}/goodput", s["goodput_cost_per_s"],
+             "cost_units_per_s_slo_met"),
+            (f"{prefix}/utilization", s["utilization"] * 100.0,
+             "pct busy (mean over replicas)"),
+        ]
+        rows.extend([
+            (f"{prefix}/routing_imbalance", self.routing_imbalance,
+             "cv routed counts"),
+            (f"{prefix}/utilization_spread", self.utilization_spread * 100.0,
+             "pct max-min"),
+            (f"{prefix}/cold_fraction", self.cold_start_fraction * 100.0,
+             "pct dispatches compiling"),
+        ])
+        return rows
+
+    def to_dict(self) -> Dict:
+        doc = self.merged.to_dict()
+        doc["summary"] = self.summary()
+        doc["per_replica"] = {
+            str(i): m.summary() for i, m in enumerate(self.per_replica)
+        }
+        doc["routed_counts"] = [int(c) for c in self.routed_counts]
+        doc["router"] = self.router
+        return doc
+
+    def to_json(self) -> str:
+        """Canonical sorted-keys JSON — byte-identical per seed, same
+        contract as ``SimMetrics.to_json``."""
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+
+def to_bench_json(name: str, sections: Dict[str, "SimMetrics | FleetMetrics"],
                   extra: Optional[Dict] = None) -> str:
     """One BENCH_<name>.json document over named simulation sections."""
     rows = []
@@ -244,6 +365,12 @@ def interference_matrix(
             if i == j:
                 continue
             pt = run_mix([specs[i], specs[j]]).per_tenant()
-            mean_i = pt.get(specs[i].tenant_id, {}).get("mean_s", 0.0)
-            M[i, j] = mean_i / solo[i] if solo[i] > 0 else 1.0
+            entry = pt.get(specs[i].tenant_id)
+            if entry is None or solo[i] <= 0.0:
+                # victim completed nothing in this co-run (starved) or has
+                # a degenerate solo baseline — surface it, don't report it
+                # as perfect isolation
+                M[i, j] = float("nan")
+            else:
+                M[i, j] = entry["mean_s"] / solo[i]
     return M

@@ -1,0 +1,140 @@
+"""Fleet routing policies: which replica does the next arrival go to?
+
+A ``Router`` sees one arrival's ``TenantSpec`` plus the live per-replica
+state (queue depth, estimated backlog seconds, warm compile caches) and
+returns a replica index. Routers are deterministic pure functions of that
+state — the fleet determinism contract (same seed, byte-identical
+metrics) extends through routing.
+
+The four policies span the classic trade-off surface:
+
+    round_robin  -- load-oblivious; perfectly balanced COUNTS, blind to
+                    cost heterogeneity and backlog (the baseline).
+    jsq          -- join-shortest-queue on pending item count; the
+                    textbook load balancer (Zhao et al.'s predictable-
+                    latency setting).
+    least_cost   -- join-least-estimated-WORK: residual busy time +
+                    estimated backlog seconds + this item's estimated
+                    cost on that replica, cold-start compile term
+                    included. Sees both cost heterogeneity and warm-cache
+                    affinity, so it lands hot shapes on replicas that
+                    already compiled them unless the queue gap says
+                    otherwise.
+    affinity     -- tenant-sticky (session affinity): tenant t pins to
+                    replica t mod N, which maximizes warm-cache reuse and
+                    per-tenant ordering, spilling JSQ-style only when the
+                    pinned replica's queue is badly out of line. The
+                    D-STACK-ish "keep a tenant's state where it is" play.
+
+``route`` receives the list of ``ReplicaPump``s (``repro.sim.simulator``)
+— the routing signals are methods on the pump: ``queue_depth()``,
+``backlog_s(now)``, ``estimate_item_s(w)``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+ROUTERS = ("round_robin", "jsq", "least_cost", "affinity")
+
+
+class Router:
+    """Chooses a replica for each arrival; stateful but deterministic."""
+
+    name: str = "base"
+
+    def route(self, w, replicas: Sequence, now: float) -> int:
+        """Return the index in ``replicas`` this workload is routed to."""
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    """Cycle through replicas regardless of state."""
+
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def route(self, w, replicas, now) -> int:
+        idx = self._next
+        self._next = (idx + 1) % len(replicas)
+        return idx
+
+
+class JoinShortestQueueRouter(Router):
+    """Fewest pending + in-flight items wins; ties rotate round-robin.
+
+    The rotating tie-break matters: always breaking to the lowest index
+    herds every arrival that lands on an all-idle fleet onto replica 0,
+    which concentrates micro-bursts and loses to plain round-robin. With
+    rotation, JSQ degenerates to round-robin exactly when queues are even
+    and only deviates when there is real imbalance to correct.
+    """
+
+    name = "jsq"
+
+    def __init__(self) -> None:
+        self._rr = 0
+
+    def route(self, w, replicas, now) -> int:
+        depths = [r.queue_depth(now) for r in replicas]
+        shortest = min(depths)
+        ties = [i for i, d in enumerate(depths) if d == shortest]
+        idx = ties[self._rr % len(ties)]
+        self._rr += 1
+        return idx
+
+
+class LeastEstimatedCostRouter(Router):
+    """Least estimated finish time for THIS item: replica backlog seconds
+    plus the item's estimated dispatch cost there (compile term included
+    when the replica is cold for the item's bucket)."""
+
+    name = "least_cost"
+
+    def route(self, w, replicas, now) -> int:
+        return min(
+            range(len(replicas)),
+            key=lambda i: (replicas[i].backlog_s(now)
+                           + replicas[i].estimate_item_s(w), i),
+        )
+
+
+class TenantAffinityRouter(Router):
+    """Session-sticky: tenant t pins to replica ``t mod N`` (maximal
+    warm-cache reuse), spilling to the shortest queue only when the
+    pinned replica's queue exceeds ``spill_factor`` x the fleet's
+    shortest queue (plus a small absolute grace so near-empty fleets
+    never spill)."""
+
+    name = "affinity"
+
+    def __init__(self, spill_factor: float = 4.0, spill_grace: int = 8):
+        if spill_factor < 1.0:
+            raise ValueError("spill_factor must be >= 1")
+        self.spill_factor = spill_factor
+        self.spill_grace = spill_grace
+
+    def route(self, w, replicas, now) -> int:
+        pinned = w.tenant_id % len(replicas)
+        depth = replicas[pinned].queue_depth(now)
+        shortest = min(range(len(replicas)),
+                       key=lambda i: (replicas[i].queue_depth(now), i))
+        if depth > self.spill_grace + self.spill_factor * \
+                replicas[shortest].queue_depth(now):
+            return shortest
+        return pinned
+
+
+def make_router(name: str, **kwargs) -> Router:
+    """Name-keyed router factory (the CLI surface of this module)."""
+    if name == "round_robin":
+        return RoundRobinRouter()
+    if name == "jsq":
+        return JoinShortestQueueRouter()
+    if name == "least_cost":
+        return LeastEstimatedCostRouter()
+    if name == "affinity":
+        return TenantAffinityRouter(**kwargs)
+    raise ValueError(f"unknown router: {name!r} (have {ROUTERS})")

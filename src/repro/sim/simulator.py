@@ -8,6 +8,13 @@ carry a no-op executor, so a million-event policy sweep runs in seconds
 on CPU with zero device work — and any policy conclusion transfers to the
 live pump because it IS the live pump.
 
+The event machinery lives in ``ReplicaPump``: one scheduler on one
+virtual clock plus the ripeness-instant drain loop. The solo
+``Simulator`` wraps exactly one pump; the fleet simulator
+(``repro.sim.fleet``) wraps N of them behind a router and merges their
+ripeness instants into one global timeline — same pump, same event
+semantics, so solo and fleet results are directly comparable.
+
 Event ordering: between consecutive trace arrivals the loop advances the
 virtual clock to each bucket's next ripeness instant and pumps there, so
 batching-window dispatches happen at their exact modeled time rather than
@@ -22,6 +29,7 @@ out. That contract is what lets CI assert on simulated SLO orderings.
 
 from __future__ import annotations
 
+from collections import deque
 from typing import Callable, Iterable, List, Optional, Sequence
 
 from repro.config import ScheduleConfig
@@ -43,11 +51,15 @@ class SimWorkload:
     a no-op executor keeps per-event cost low enough for million-event
     traces (the dataclass's default-factory fields roughly double intake
     time at that scale).
+
+    ``est_s`` is the router's estimated solo dispatch seconds for this
+    item (0.0 outside fleet runs) — the pump subtracts it back out of its
+    backlog estimate on completion.
     """
 
     __slots__ = ("tenant_id", "bucket", "cost", "slo_s", "kind", "flops",
                  "bytes", "merge_family", "execute", "arrival_time",
-                 "result", "completion_time")
+                 "result", "completion_time", "est_s")
 
     def __init__(self, spec, cost: float):
         self.tenant_id = spec.tenant_id
@@ -62,26 +74,66 @@ class SimWorkload:
         self.arrival_time = 0.0
         self.result = None
         self.completion_time = None
+        self.est_s = 0.0
 
 
-class Simulator:
-    """Drives the real scheduler over a trace on a virtual timeline."""
+class ReplicaPump:
+    """One replica of the real scheduler on its own virtual clock, plus
+    the ripeness-instant drain machinery — the unit both the solo
+    ``Simulator`` and the fleet simulator are built from."""
+
+    # 1 simulated nanosecond — larger than any float rounding error at
+    # realistic trace horizons, negligible against microsecond dispatches
+    _RIPE_EPS = 1e-9
 
     def __init__(
         self,
         schedule: Optional[ScheduleConfig] = None,
         cost_model: Optional[Callable[[Sequence], float]] = None,
         start_s: float = 0.0,
+        clock: Optional[VirtualClock] = None,
+        replica_id: Optional[int] = None,
     ):
-        self.clock = VirtualClock(start_s)
+        self.replica_id = replica_id
+        self.clock = clock if clock is not None else VirtualClock(start_s)
+        self.cost_model = cost_model or RooflineCostModel()
         self.scheduler = DynamicSpaceTimeScheduler(
             schedule or ScheduleConfig(),
             clock=self.clock,
-            cost_model=cost_model or RooflineCostModel(),
+            cost_model=self.cost_model,
+            replica_id=replica_id,
         )
+        # metric sinks every completion is recorded into (solo: one; fleet:
+        # the replica's own + the fleet-wide accumulator)
+        self.accs: List[MetricsAccumulator] = []
+        # router's running backlog estimate: Σ est_s of pending items
+        self.pending_est_s = 0.0
+        # fleet-only (set by FleetSimulator): completion instants of
+        # dispatched items, so queue_depth(now) can count work that is
+        # modeled as done on this replica's (ahead) clock but still in
+        # flight at the fleet's current instant. Off in solo runs — a
+        # million-event trace must not accumulate a million floats.
+        self.track_inflight = False
+        self._inflight: deque = deque()
 
-    # ------------------------------------------------------------ event loop
-    def _next_ripe_time(self) -> Optional[float]:
+    # ------------------------------------------------------------- intake
+    def submit(self, w: SimWorkload, t_s: float) -> bool:
+        """Advance to the arrival instant, admit, and pump immediately.
+
+        The TRUE trace time is stamped even when this replica's (busy)
+        clock has run ahead — queueing delay under overload stays honest.
+        """
+        self.clock.advance_to(t_s)
+        admitted = self.scheduler.submit(w, now=t_s)
+        if admitted:
+            self.pending_est_s += w.est_s
+        # pump even when admission rejected: advancing to t_s may have
+        # ripened other buckets (drain_until only covers instants < t_s)
+        self._absorb(self.scheduler.pump())
+        return admitted
+
+    # ---------------------------------------------------------- event loop
+    def next_ripe_time(self) -> Optional[float]:
         """Earliest instant any bucket becomes dispatchable.
 
         For slack-aware policies the window shrinks as time passes, so
@@ -105,11 +157,7 @@ class Simulator:
                 best = t
         return best
 
-    # 1 simulated nanosecond — larger than any float rounding error at
-    # realistic trace horizons, negligible against microsecond dispatches
-    _RIPE_EPS = 1e-9
-
-    def _pump_at(self, t_ripe: float, acc: MetricsAccumulator) -> List:
+    def pump_at(self, t_ripe: float) -> List:
         """Advance to a ripeness instant and pump; nudge one epsilon past
         it if float rounding left the window a ULP short of elapsed."""
         self.clock.advance_to(t_ripe)
@@ -117,52 +165,119 @@ class Simulator:
         if not done:
             self.clock.advance_to(t_ripe + self._RIPE_EPS)
             done = self.scheduler.pump()
-        self._absorb(done, acc)
+        self._absorb(done)
         return done
 
-    def _drain_until(self, t_limit: float, acc: MetricsAccumulator) -> None:
+    def drain_until(self, t_limit: float) -> None:
         """Pump every bucket that ripens strictly before ``t_limit``."""
         while True:
-            t_ripe = self._next_ripe_time()
+            t_ripe = self.next_ripe_time()
             if t_ripe is None or t_ripe >= t_limit:
                 return
-            if not self._pump_at(t_ripe, acc):
+            if not self.pump_at(t_ripe):
                 return  # estimate failed to ripen anything; arrivals resume
 
-    def _absorb(self, done: List, acc: MetricsAccumulator) -> None:
-        add = acc.add
-        for w in done:
-            add(w.tenant_id, w.completion_time - w.arrival_time,
-                w.slo_s, w.cost, w.kind)
-
-    def run(self, trace: Trace | Iterable[Arrival]) -> SimMetrics:
-        sched, clock = self.scheduler, self.clock
-        submit, pump = sched.submit, sched.pump
-        acc = MetricsAccumulator()
-        t_start = clock.now()
-
-        for t_s, spec, cost in trace:
-            self._drain_until(t_s, acc)
-            clock.advance_to(t_s)
-            # stamp TRUE arrival time even when the busy clock ran ahead
-            submit(SimWorkload(spec, cost), now=t_s)
-            self._absorb(pump(), acc)
-
-        # drain the tail at exact ripeness instants, then force-flush
-        # whatever remainder is left
+    def drain_tail(self) -> None:
+        """Drain at exact ripeness instants, then force-flush the rest."""
+        sched = self.scheduler
         while len(sched.queue):
-            t_ripe = self._next_ripe_time()
-            if t_ripe is None or not self._pump_at(t_ripe, acc):
-                self._absorb(sched.flush(), acc)
+            t_ripe = self.next_ripe_time()
+            if t_ripe is None or not self.pump_at(t_ripe):
+                self._absorb(sched.flush())
                 break
 
+    def _absorb(self, done: List) -> None:
+        track = self.track_inflight
+        for w in done:
+            self.pending_est_s -= w.est_s
+            lat = w.completion_time - w.arrival_time
+            for acc in self.accs:
+                acc.add(w.tenant_id, lat, w.slo_s, w.cost, w.kind)
+            if track:
+                self._inflight.append(w.completion_time)
+        if self.pending_est_s < 0.0:  # float dust from += / -= pairs
+            self.pending_est_s = 0.0
+
+    # ------------------------------------------------------ routing signals
+    def queue_depth(self, now: Optional[float] = None) -> int:
+        """Occupancy as a router sees it: items pending in the queue plus
+        items whose modeled completion lies beyond the fleet's current
+        instant (this replica's clock ran ahead; the work is still in
+        flight in fleet time even though this replica already priced it).
+        Without ``now`` (or in-flight tracking off) it is just the queue.
+        """
+        depth = len(self.scheduler.queue)
+        if now is None or not self.track_inflight:
+            return depth
+        inflight = self._inflight
+        while inflight and inflight[0] <= now:
+            inflight.popleft()
+        return depth + len(inflight)
+
+    def backlog_s(self, now: float) -> float:
+        """Estimated seconds until this replica would run dry: residual
+        busy time (its clock ahead of global ``now``) plus the estimated
+        cost of everything still queued."""
+        return max(0.0, self.clock.now() - now) + self.pending_est_s
+
+    def estimate_item_s(self, w) -> float:
+        """Estimated seconds this item adds to THIS replica.
+
+        If the item's bucket already has pending items here it rides the
+        forming super-kernel — marginal roofline cost only, compile shared
+        with the batch. Otherwise it opens a fresh dispatch: full solo
+        cost, plus the compile term when this replica's cache is cold for
+        the bucket (the warm-affinity signal)."""
+        model = self.cost_model
+        if self.scheduler.queue.head(w.bucket) is not None:
+            item_s = getattr(model, "item_s", None)
+            if item_s is not None:
+                return item_s(w)
+        estimate = getattr(model, "estimate", None)
+        if estimate is not None:
+            return estimate((w,))
+        return model((w,))
+
+    def freeze(self, acc: MetricsAccumulator,
+               sim_duration_s: float) -> SimMetrics:
+        """Freeze one accumulator against this replica's scheduler stats."""
+        sched = self.scheduler
         return acc.freeze(
-            sim_duration_s=clock.now() - t_start,
+            sim_duration_s=sim_duration_s,
             busy_time_s=sched.stats.busy_time_s,
             dispatches=sched.stats.dispatches,
             rejected=sched.stats.rejected,
             evicted_tenants=len(sched.evicted),
         )
+
+
+class Simulator:
+    """Drives the real scheduler over a trace on a virtual timeline."""
+
+    def __init__(
+        self,
+        schedule: Optional[ScheduleConfig] = None,
+        cost_model: Optional[Callable[[Sequence], float]] = None,
+        start_s: float = 0.0,
+    ):
+        self.pump = ReplicaPump(schedule=schedule, cost_model=cost_model,
+                                start_s=start_s)
+        self.clock = self.pump.clock
+        self.scheduler = self.pump.scheduler
+
+    def run(self, trace: Trace | Iterable[Arrival]) -> SimMetrics:
+        pump = self.pump
+        acc = MetricsAccumulator()
+        pump.accs = [acc]
+        submit, drain_until = pump.submit, pump.drain_until
+        t_start = pump.clock.now()
+
+        for t_s, spec, cost in trace:
+            drain_until(t_s)
+            submit(SimWorkload(spec, cost), t_s)
+        pump.drain_tail()
+
+        return pump.freeze(acc, sim_duration_s=pump.clock.now() - t_start)
 
 
 def simulate(

@@ -114,6 +114,10 @@ class _MixTrace(Trace):
         if np.any(w < 0) or w.sum() <= 0:
             raise ValueError("spec weights must be non-negative with a positive sum")
         self._cum_w = np.cumsum(w / w.sum())
+        # float cumsum can land one ULP below 1.0 — exactly the largest
+        # value rng.random() can draw, which would searchsorted past the
+        # last spec; pin the tail so every draw lands in range
+        self._cum_w[-1] = 1.0
 
     def _init_state(self, rng: np.random.Generator) -> dict:
         """Per-iteration generator state (kept off the instance so two
@@ -324,6 +328,32 @@ def paper_sgemm_mix(
             merge_family=(bucket.op, bucket.K, bucket.N, bucket.dtype),
         ))
     return out
+
+
+def fleet_sgemm_mix(
+    tenants: int,
+    zipf_a: float = 1.1,
+    slo_tiers_s: Sequence[float] = (0.005, 0.010, 0.025),
+    shapes: Optional[Sequence[str]] = None,
+    dtype: str = "float32",
+) -> List[TenantSpec]:
+    """Fleet-scale mix: many tenants with Zipf-distributed arrival shares.
+
+    Same Table-1 GEMM tenants as ``paper_sgemm_mix``, but tenant t's
+    arrival weight is ``(t+1)^-zipf_a`` — a few hot tenants dominate the
+    stream, the long tail trickles. That skew is what makes fleet routing
+    a real decision: sticky/affinity policies keep a hot tenant's compiled
+    variants warm on few replicas, load balancers spread its traffic (and
+    its compiles) everywhere. ``zipf_a=0`` recovers the uniform mix.
+    """
+    if zipf_a < 0.0:
+        raise ValueError(f"zipf_a must be >= 0, got {zipf_a}")
+    return [
+        dataclasses.replace(spec, weight=float((t + 1) ** -zipf_a))
+        for t, spec in enumerate(
+            paper_sgemm_mix(tenants, slo_tiers_s=slo_tiers_s,
+                            shapes=shapes, dtype=dtype))
+    ]
 
 
 def prefill_decode_mix(

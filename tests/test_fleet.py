@@ -1,0 +1,271 @@
+"""The multi-replica fleet layer (repro.sim.fleet / router): routing
+policies, per-replica compile-cache cold-start accounting, the merged
+global timeline, and the determinism / scaling contracts CI asserts on.
+
+The hypothesis goodput-monotone-in-replicas property lives at the bottom
+behind the usual importorskip guard; a plain parametrized version of the
+same property runs everywhere.
+"""
+
+import pytest
+
+from repro.config import ScheduleConfig
+from repro.sim import (
+    ColdStartCostModel,
+    FleetSimulator,
+    ReplicaPump,
+    RooflineCostModel,
+    SimWorkload,
+    estimate_capacity_hz,
+    fleet_sgemm_mix,
+    make_router,
+    make_trace,
+    simulate_fleet,
+)
+
+SCHED = ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32)
+MIX = fleet_sgemm_mix(12)
+BASE = RooflineCostModel(strategy="space_time")
+CAP_HZ = estimate_capacity_hz(MIX, BASE)
+OFFERED_HZ = 0.85 * 4 * CAP_HZ  # full-fleet rho for a 4-replica grid
+
+
+def _fleet(replicas=4, router="jsq", events=2500, seed=0, compile_s=2e-4,
+           process="mmpp"):
+    return simulate_fleet(
+        make_trace(process, MIX, OFFERED_HZ, events, seed=seed),
+        replicas=replicas, router=router, schedule=SCHED, cost_model=BASE,
+        compile_s=compile_s)
+
+
+def _pumps(n, compile_s=0.0):
+    out = []
+    for i in range(n):
+        model = BASE if compile_s == 0.0 else ColdStartCostModel(
+            BASE, compile_s=compile_s)
+        p = ReplicaPump(schedule=SCHED, cost_model=model, replica_id=i)
+        p.track_inflight = True
+        out.append(p)
+    return out
+
+
+def _fill(pump, spec, n):
+    """Queue n items WITHOUT pumping (direct scheduler submit)."""
+    for _ in range(n):
+        pump.scheduler.submit(SimWorkload(spec, spec.cost), now=0.0)
+
+
+# ------------------------------------------------------------------- routers
+class TestRouters:
+    def test_round_robin_cycles(self):
+        r = make_router("round_robin")
+        pumps = _pumps(3)
+        assert [r.route(MIX[0], pumps, 0.0) for _ in range(7)] \
+            == [0, 1, 2, 0, 1, 2, 0]
+
+    def test_jsq_picks_shortest(self):
+        r = make_router("jsq")
+        pumps = _pumps(3)
+        _fill(pumps[0], MIX[0], 5)
+        _fill(pumps[1], MIX[0], 2)
+        _fill(pumps[2], MIX[0], 9)
+        assert r.route(MIX[0], pumps, 0.0) == 1
+
+    def test_jsq_rotates_ties(self):
+        """An all-even fleet must degenerate to round-robin, not herd
+        every arrival onto replica 0."""
+        r = make_router("jsq")
+        pumps = _pumps(3)
+        assert [r.route(MIX[0], pumps, 0.0) for _ in range(6)] \
+            == [0, 1, 2, 0, 1, 2]
+
+    def test_jsq_counts_inflight_work(self):
+        """A replica whose clock ran ahead has an empty queue but undone
+        work in fleet time; JSQ must not treat it as idle."""
+        pumps = _pumps(2)
+        # replica 0: dispatched work completing at t=5.0 on its own clock
+        w = SimWorkload(MIX[0], MIX[0].cost)
+        pumps[0].scheduler.submit(w, now=0.0)
+        pumps[0].clock.advance_to(5.0)
+        pumps[0]._absorb(pumps[0].scheduler.flush())
+        assert pumps[0].queue_depth(now=0.0) == 1   # still in flight
+        r = make_router("jsq")
+        assert r.route(MIX[0], pumps, 0.0) == 1
+        # reads are monotone in `now`: by 6.0 the work has landed (this
+        # pops the in-flight record, so it comes after the routing check)
+        assert pumps[0].queue_depth(now=6.0) == 0
+
+    def test_affinity_pins_by_tenant(self):
+        r = make_router("affinity")
+        pumps = _pumps(4)
+        assert r.route(MIX[5], pumps, 0.0) == 5 % 4
+        assert r.route(MIX[2], pumps, 0.0) == 2
+
+    def test_affinity_spills_under_gross_imbalance(self):
+        r = make_router("affinity", spill_factor=2.0, spill_grace=2)
+        pumps = _pumps(2)
+        _fill(pumps[0], MIX[0], 50)  # tenant 0 pins here, badly backed up
+        assert r.route(MIX[0], pumps, 0.0) == 1
+
+    def test_least_cost_prefers_warm_replica(self):
+        """Equal queues, one replica already compiled the bucket: the
+        cold-start term must steer the arrival to the warm cache."""
+        r = make_router("least_cost")
+        pumps = _pumps(2, compile_s=1e-3)
+        pumps[1].cost_model((SimWorkload(MIX[0], MIX[0].cost),))  # warm it
+        assert r.route(MIX[0], pumps, 0.0) == 1
+
+    def test_least_cost_prefers_forming_batch(self):
+        """An item whose bucket is already pending rides that super-kernel
+        for its marginal roofline cost — cheaper than opening a fresh
+        (cold) dispatch elsewhere."""
+        pumps = _pumps(2, compile_s=1e-3)
+        _fill(pumps[0], MIX[0], 3)
+        w = SimWorkload(MIX[0], MIX[0].cost)
+        assert pumps[0].estimate_item_s(w) < pumps[1].estimate_item_s(w)
+
+    def test_unknown_router_rejected(self):
+        with pytest.raises(ValueError, match="unknown router"):
+            make_router("warp_speed")
+
+
+# ---------------------------------------------------------------- cold start
+class TestColdStartCostModel:
+    def test_first_dispatch_pays_compile(self):
+        m = ColdStartCostModel(BASE, compile_s=1e-3)
+        batch = (SimWorkload(MIX[0], MIX[0].cost),)
+        cold = m(batch)
+        warm = m(batch)
+        assert cold == pytest.approx(warm + 1e-3)
+        assert m.cold_dispatches == 1 and m.dispatches == 2
+
+    def test_per_variant_compile(self):
+        """Different pow2-R variants of one bucket compile separately —
+        same scheme as the live SuperKernelCache."""
+        m = ColdStartCostModel(BASE, compile_s=1e-3)
+        one = tuple(SimWorkload(MIX[0], MIX[0].cost) for _ in range(1))
+        eight = tuple(SimWorkload(MIX[0], MIX[0].cost) for _ in range(8))
+        m(one)
+        assert m(eight) == pytest.approx(BASE(eight) + 1e-3)  # r8 still cold
+        assert m.bucket_warm(MIX[0].bucket)
+
+    def test_estimate_does_not_mutate(self):
+        m = ColdStartCostModel(BASE, compile_s=1e-3)
+        batch = (SimWorkload(MIX[0], MIX[0].cost),)
+        est = m.estimate(batch)
+        assert est == pytest.approx(BASE(batch) + 1e-3)
+        assert m(batch) == pytest.approx(est)  # still cold: estimate was pure
+        assert m.dispatches == 1
+
+    def test_instances_are_independent_caches(self):
+        a = ColdStartCostModel(BASE, compile_s=1e-3)
+        b = ColdStartCostModel(BASE, compile_s=1e-3)
+        batch = (SimWorkload(MIX[0], MIX[0].cost),)
+        a(batch)
+        assert b(batch) == pytest.approx(BASE(batch) + 1e-3)  # b still cold
+
+
+# -------------------------------------------------------------------- fleet
+class TestFleetSimulator:
+    def test_all_events_complete_once(self):
+        m = _fleet(events=2000)
+        assert m.merged.completed == 2000
+        assert sum(r.completed for r in m.per_replica) == 2000
+        assert sum(m.routed_counts) == 2000
+
+    def test_rejects_zero_replicas(self):
+        with pytest.raises(ValueError, match="replicas"):
+            FleetSimulator(0)
+
+    @pytest.mark.parametrize("router", ["round_robin", "jsq", "least_cost",
+                                        "affinity"])
+    def test_same_seed_bit_identical_metrics_json(self, router):
+        a = _fleet(router=router, seed=3).to_json()
+        b = _fleet(router=router, seed=3).to_json()
+        assert a == b  # byte-identical: the determinism contract
+
+    def test_different_seed_differs(self):
+        assert _fleet(seed=1).to_json() != _fleet(seed=2).to_json()
+
+    def test_single_replica_matches_solo_semantics(self):
+        """A 1-replica fleet with cold starts off is the solo simulator
+        wearing a router — completions and latencies must agree."""
+        from repro.sim import simulate
+
+        trace = lambda: make_trace("mmpp", MIX, OFFERED_HZ, 1500, seed=0)  # noqa: E731
+        fleet = _fleet(replicas=1, events=1500, compile_s=0.0)
+        solo = simulate(trace(), SCHED, BASE)
+        assert fleet.merged.to_json() == solo.to_json()
+
+    def test_routing_imbalance_round_robin_floor(self):
+        m = _fleet(router="round_robin", events=2000)
+        assert m.routing_imbalance == pytest.approx(0.0)
+        assert m.utilization_spread >= 0.0
+
+    def test_cold_fraction_decreases_over_trace(self):
+        """Caches warm up: the cold-dispatch fraction in the first half of
+        the horizon must exceed the second half's."""
+        for seed in (0, 1, 2):
+            m = _fleet(seed=seed)
+            first, second = m.cold_fraction_halves()
+            assert first > second
+            assert m.cold_start_fraction > 0.0
+
+    def test_goodput_monotone_in_replicas_plain(self):
+        for seed in (0, 5):
+            goods = [_fleet(replicas=n, seed=seed)
+                     .summary()["goodput_cost_per_s"] for n in (1, 2, 4)]
+            for lo, hi in zip(goods, goods[1:]):
+                assert hi >= lo * (1.0 - 1e-6)
+
+    def test_load_aware_routers_beat_round_robin_p95(self):
+        """The fleet_sweep --check contract at its pinned seed."""
+        rr = _fleet(router="round_robin").summary()["p95_s"]
+        for router in ("jsq", "least_cost"):
+            assert _fleet(router=router).summary()["p95_s"] <= rr
+
+    def test_replica_id_reaches_dispatch_tap(self):
+        """core.scheduler forwards its replica identity to on_dispatch."""
+        seen = set()
+        sim = FleetSimulator(3, router="round_robin", schedule=SCHED,
+                             cost_model=BASE, compile_s=0.0)
+        for pump in sim.pumps:
+            pump.scheduler.on_dispatch = \
+                lambda batch, dt, rid: seen.add(rid)
+        sim.run(make_trace("poisson", MIX, OFFERED_HZ, 300, seed=0))
+        assert seen == {0, 1, 2}
+
+    def test_summary_carries_fleet_signals(self):
+        s = _fleet(events=1500).summary()
+        for key in ("replicas", "routing_imbalance", "utilization_spread",
+                    "cold_start_fraction", "cold_fraction_first_half",
+                    "cold_fraction_second_half"):
+            assert key in s
+        assert s["replicas"] == 4.0
+        # fleet utilization is the per-replica mean, never the clamped sum
+        assert 0.0 <= s["utilization"] <= 1.0
+
+    def test_bench_rows_include_fleet_rows(self):
+        rows = _fleet(events=1500).bench_rows("fleet/test")
+        names = [r[0] for r in rows]
+        assert "fleet/test/p95" in names
+        assert "fleet/test/routing_imbalance" in names
+        assert "fleet/test/cold_fraction" in names
+
+
+# --------------------------------------------------- hypothesis (optional)
+def test_goodput_monotone_in_replicas_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    settings.register_profile("fleet", max_examples=8, deadline=None)
+    settings.load_profile("fleet")
+
+    @given(seed=st.integers(0, 11),
+           router=st.sampled_from(["round_robin", "jsq"]))
+    def prop(seed, router):
+        goods = [_fleet(replicas=n, router=router, seed=seed, events=1200)
+                 .summary()["goodput_cost_per_s"] for n in (1, 2, 4)]
+        for lo, hi in zip(goods, goods[1:]):
+            assert hi >= lo * (1.0 - 1e-6)
+    prop()

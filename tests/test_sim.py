@@ -184,6 +184,39 @@ class TestCalibratedCostModel:
         assert loaded.counts == model.counts
         assert loaded(_batch(mix, 4)) == pytest.approx(2e-4)
 
+    def test_roundtrip_preserves_counts_and_keeps_ewma_updating(self):
+        """Regression: persisting a fitted model must carry per-key
+        observation counts, so a LOADED model stays in steady-state EWMA.
+        Without the counts the warm-up schedule restarts and the first
+        post-load sample wipes the whole fit (alpha_eff = 1/1 = 1)."""
+        mix = paper_sgemm_mix(1)
+        batch = _batch(mix, 4)
+        model = CalibratedCostModel(ewma_alpha=0.2)
+        for _ in range(10):  # well past the 1/alpha warm-up
+            model.observe(batch, 1e-3)
+        fitted = model(batch)
+        assert fitted == pytest.approx(1e-3)
+
+        loaded = CalibratedCostModel.from_json(model.to_json())
+        assert loaded.counts == model.counts
+        loaded.observe(batch, 5e-3)  # an outlier sample after reload
+        # steady-state EWMA: 0.2*5e-3 + 0.8*1e-3 — NOT the raw 5e-3 a
+        # restarted warm-up would produce
+        assert loaded(batch) == pytest.approx(0.2 * 5e-3 + 0.8 * fitted)
+        assert loaded(batch) != pytest.approx(5e-3)
+
+    def test_warmup_is_cumulative_mean_then_ewma(self):
+        """First 1/alpha observations average (fast convergence from the
+        first sample), later ones blend at steady-state alpha."""
+        mix = paper_sgemm_mix(1)
+        batch = _batch(mix, 2)
+        model = CalibratedCostModel(ewma_alpha=0.25)
+        for s in (1e-3, 2e-3, 3e-3, 6e-3):
+            model.observe(batch, s)
+        assert model(batch) == pytest.approx(3e-3)  # plain mean of 4
+        model.observe(batch, 7e-3)  # count 5 > 1/alpha: EWMA now
+        assert model(batch) == pytest.approx(0.25 * 7e-3 + 0.75 * 3e-3)
+
     def test_scheduler_on_dispatch_tap(self):
         """A live scheduler feeds the calibrator through on_dispatch."""
         from repro.core import DynamicSpaceTimeScheduler, VirtualClock
