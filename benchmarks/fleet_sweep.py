@@ -22,25 +22,43 @@ What the grid shows (and ``--check`` gates for CI):
 
     PYTHONPATH=src python benchmarks/fleet_sweep.py --events 5000 \
         --replicas 4 --check --json BENCH_fleet_sweep.json
+
+With ``--specs`` (and optionally ``--autoscale``) the sweep switches to
+the HETEROGENEOUS grid instead: mixed chip generations behind every
+router, an equal-aggregate-FLOP/s homogeneous twin for comparison, and an
+elastic fleet grown from one replica by the backlog autoscaler (spin-up
+pays a full cold compile cache). Its ``--check`` gates: speed-aware
+routing (least_cost p95 <= round_robin p95 on the mixed fleet), hetero
+goodput not below the homogeneous twin's, the elastic fleet actually
+scaling, and same-seed byte-identical JSON INCLUDING scale events.
+
+    PYTHONPATH=src python benchmarks/fleet_sweep.py --events 5000 \
+        --replicas 4 --specs v5e,v5e_half --autoscale --check \
+        --json BENCH_fleet_hetero.json
 """
 
 from __future__ import annotations
 
 import argparse
+import math
 import sys
 import time
 from typing import Dict, List, Optional
 
 from repro.config import ScheduleConfig
+from repro.launch.roofline import TPU_V5E
 from repro.sim import (
     ROUTERS,
+    BacklogAutoscaler,
     FleetMetrics,
     RooflineCostModel,
     estimate_capacity_hz,
+    fleet_capacity_hz,
     fleet_sgemm_mix,
     make_trace,
     paper_sgemm_mix,
     prefill_decode_mix,
+    resolve_spec,
     simulate_fleet,
     to_bench_json,
 )
@@ -181,6 +199,169 @@ def run(events: int = 20_000, replicas: int = 4, tenants: int = 12,
     return sections
 
 
+def run_hetero(events: int = 20_000, replicas: int = 4,
+               specs_arg: str = "v5e,v5e_half", tenants: int = 12,
+               seed: int = 0, process: str = "mmpp", mix_name: str = "fleet",
+               rho: float = 0.85, compile_us: float = 200.0,
+               spinup_us: float = 100.0, autoscale: bool = False,
+               check: bool = False, json_path: Optional[str] = None,
+               csv_rows=None) -> Dict[str, FleetMetrics]:
+    """Heterogeneous + elastic fleet grid (see module docstring)."""
+    t_wall = time.perf_counter()
+    mix = build_mix(mix_name, tenants)
+    compile_s = compile_us * 1e-6
+    sched = ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32)
+    sections: Dict[str, FleetMetrics] = {}
+    failures: List[str] = []
+
+    names = [s.strip() for s in specs_arg.split(",") if s.strip()]
+    replica_specs = [names[i % len(names)] for i in range(replicas)]
+    # the equal-aggregate-FLOP/s homogeneous twin: the SAME total roofline
+    # throughput delivered by round(sum of speed factors) full-speed
+    # replicas — the fleet you would buy if you scrapped the old chips.
+    # The mixed fleet should win: more replicas = more parallel dispatch
+    # slots and shorter queues for the same silicon, PROVIDED the router
+    # prices the speed difference (that is the tentpole claim).
+    factors = [resolve_spec(s).peak_flops / TPU_V5E.peak_flops
+               for s in replica_specs]
+    # round half UP (banker's rounding would under-provision the twin on
+    # half-integer aggregates and make the goodput gate trivially true)
+    eq_replicas = max(1, math.floor(sum(factors) + 0.5))
+
+    # offered load anchored to the MIXED fleet's aggregate space_time
+    # capacity; the twin sees the same trace, so the comparison is pure
+    capacity_hz = fleet_capacity_hz(mix, replica_specs)
+    offered_hz = rho * capacity_hz
+
+    # autoscaler thresholds are SLO-denominated: scale up when the mean
+    # replica is half a mid-tier SLO behind, down below a tenth of it
+    slos = sorted(s.slo_s for s in mix)
+    slo_mid = slos[len(slos) // 2]
+    tick_s = 50.0 / offered_hz  # a control decision every ~50 arrivals
+
+    def scaler() -> BacklogAutoscaler:
+        return BacklogAutoscaler(
+            min_replicas=1, max_replicas=replicas,
+            up_backlog_s=slo_mid / 2.0, down_backlog_s=slo_mid / 10.0,
+            interval_s=tick_s, cooldown_ticks=2, spinup_s=spinup_us * 1e-6)
+
+    print(f"\n=== fleet_hetero: {events} events/cell, mix={mix_name}, "
+          f"process={process}, seed={seed} ===")
+    print(f"replica specs {replica_specs} (aggregate {sum(factors):g}x v5e; "
+          f"homogeneous twin: {eq_replicas} x v5e); aggregate space_time "
+          f"capacity ~{capacity_hz:,.0f}/s, offered {rho:.2f}x "
+          f"(~{offered_hz:,.0f}/s); compile {compile_us:g}us, spin-up "
+          f"{spinup_us:g}us"
+          + (f"; autoscale 1..{replicas} replicas, tick {tick_s*1e6:.0f}us"
+             if autoscale else ""))
+
+    def trace():
+        return make_trace(process, mix, offered_hz, events, seed=seed)
+
+    def run_cell(router: str, specs=None, n: int = replicas,
+                 autoscaler=None) -> FleetMetrics:
+        return simulate_fleet(
+            trace(), replicas=n, router=router, schedule=sched,
+            specs=specs, strategy="space_time",
+            cost_model=None if specs else RooflineCostModel(
+                strategy="space_time"),
+            compile_s=compile_s, autoscaler=autoscaler)
+
+    print(f"\n{'cell':>24s} {'p95 ms':>9s} {'attain':>7s} {'goodput':>10s} "
+          f"{'imbal':>6s} {'util':>6s} {'cold%':>6s} {'repl':>9s}")
+
+    def show(name: str, m: FleetMetrics) -> None:
+        sections[name] = m
+        s = m.summary()
+        repl = f"{m.initial_replicas}->{m.final_active}" if m.scale_events \
+            else f"{m.final_active}"
+        print(f"{name:>24s} {s['p95_s']*1e3:9.3f} {s['slo_attainment']:7.3f} "
+              f"{s['goodput_cost_per_s']:10.4g} {s['routing_imbalance']:6.3f} "
+              f"{s['utilization']:6.3f} {s['cold_start_fraction']*100:6.2f} "
+              f"{repl:>9s}")
+
+    for router in ROUTERS:
+        show(f"hetero_{router}", run_cell(router, specs=replica_specs))
+    for router in ("round_robin", "least_cost"):
+        show(f"homo_eq_{router}", run_cell(router, n=eq_replicas))
+    if autoscale:
+        for router in ("jsq", "least_cost"):
+            show(f"elastic_{router}",
+                 run_cell(router, specs=replica_specs, n=1,
+                          autoscaler=scaler()))
+
+    # -------------------------------------------- 1. speed-aware routing
+    rr = sections["hetero_round_robin"].summary()["p95_s"]
+    lc = sections["hetero_least_cost"].summary()["p95_s"]
+    ok = lc <= rr
+    print(f"\nmixed fleet: least_cost p95 <= round_robin p95: "
+          f"{lc*1e3:.3f}ms vs {rr*1e3:.3f}ms -> {ok}")
+    if not ok:
+        failures.append(
+            f"hetero least_cost p95 {lc*1e3:.3f}ms > round_robin "
+            f"{rr*1e3:.3f}ms")
+
+    # ------------------------------- 2. hetero vs equal-aggregate twin
+    g_het = sections["hetero_least_cost"].summary()["goodput_cost_per_s"]
+    g_eq = sections["homo_eq_least_cost"].summary()["goodput_cost_per_s"]
+    ok = g_het >= g_eq * (1.0 - 1e-6)
+    print(f"hetero goodput >= equal-aggregate homogeneous twin "
+          f"({eq_replicas} x v5e, least_cost): {g_het:.4g} vs {g_eq:.4g} "
+          f"-> {ok}")
+    if not ok:
+        failures.append(
+            f"hetero least_cost goodput {g_het:.6g} < homogeneous twin "
+            f"{g_eq:.6g}")
+
+    # ------------------------------------------------ 3. elasticity
+    if autoscale:
+        m = sections["elastic_least_cost"]
+        print(f"elastic fleet scaled 1 -> {m.final_active} active "
+              f"({m.scale_ups} up / {m.scale_downs} down events)")
+        if m.scale_ups < 1:
+            failures.append("elastic fleet never scaled up under rho="
+                            f"{rho} load")
+
+    # ---------------------------------------------- 4. determinism
+    headline = "elastic_least_cost" if autoscale else "hetero_least_cost"
+    rerun = run_cell("least_cost", specs=replica_specs,
+                     n=1 if autoscale else replicas,
+                     autoscaler=scaler() if autoscale else None)
+    identical = rerun.to_json() == sections[headline].to_json()
+    print(f"same-seed rerun of {headline} byte-identical "
+          f"(scale events included): {identical}")
+    if not identical:
+        failures.append(f"{headline} rerun JSON differs (nondeterminism)")
+
+    # -------------------------------------------------------- outputs
+    if csv_rows is not None:
+        for name, m in sections.items():
+            csv_rows.extend(m.bench_rows(f"fleet_hetero/{name}"))
+    if json_path:
+        with open(json_path, "w") as fh:
+            fh.write(to_bench_json(
+                "fleet_hetero", sections,
+                extra={"events": events, "seed": seed, "process": process,
+                       "mix": mix_name, "rho": rho, "replicas": replicas,
+                       "specs": replica_specs, "eq_replicas": eq_replicas,
+                       "compile_us": compile_us, "spinup_us": spinup_us,
+                       "autoscale": autoscale, "capacity_hz": capacity_hz}))
+        print(f"\nwrote {json_path}")
+
+    print(f"\ntotal wall time: {time.perf_counter() - t_wall:.1f}s")
+    if failures:
+        for f in failures:
+            print(f"CHECK FAILED: {f}", file=sys.stderr)
+        if check:
+            sys.exit(1)
+    elif check:
+        print("checks passed: least_cost p95 <= round_robin on the mixed "
+              "fleet; hetero goodput >= equal-aggregate homogeneous twin; "
+              + ("elastic fleet scaled up; " if autoscale else "")
+              + "same-seed JSON byte-identical incl. scale events")
+    return sections
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--events", type=int, default=20_000,
@@ -199,15 +380,34 @@ def main() -> None:
     ap.add_argument("--compile-us", type=float, default=200.0,
                     help="per-(bucket,pow2-R) compile cold-start cost "
                          "(microseconds; 0 disables)")
+    ap.add_argument("--specs", default=None,
+                    help="comma-separated per-replica hardware (cycled), "
+                         "e.g. v5e,v5e_half — switches to the heterogeneous "
+                         "grid")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="add elastic cells grown from 1 replica by the "
+                         "backlog autoscaler (implies the hetero grid)")
+    ap.add_argument("--spinup-us", type=float, default=100.0,
+                    help="replica spin-up latency before a scaled-up "
+                         "replica takes work (microseconds)")
     ap.add_argument("--json", default=None, help="write BENCH-style JSON here")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero unless routing/scaling/determinism "
                          "contracts hold")
     args = ap.parse_args()
-    run(events=args.events, replicas=args.replicas, tenants=args.tenants,
-        seed=args.seed, process=args.process, mix_name=args.mix,
-        rho=args.rho, compile_us=args.compile_us, check=args.check,
-        json_path=args.json)
+    if args.specs or args.autoscale:
+        run_hetero(events=args.events, replicas=args.replicas,
+                   specs_arg=args.specs or "v5e,v5e_half",
+                   tenants=args.tenants, seed=args.seed,
+                   process=args.process, mix_name=args.mix, rho=args.rho,
+                   compile_us=args.compile_us, spinup_us=args.spinup_us,
+                   autoscale=args.autoscale, check=args.check,
+                   json_path=args.json)
+    else:
+        run(events=args.events, replicas=args.replicas, tenants=args.tenants,
+            seed=args.seed, process=args.process, mix_name=args.mix,
+            rho=args.rho, compile_us=args.compile_us, check=args.check,
+            json_path=args.json)
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced sweeps")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: table1,fig2,fig3,fig4,fig5,trace,sim,fleet,roofline")
+                    help="comma-separated subset: table1,fig2,fig3,fig4,fig5,trace,sim,fleet,hetero,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -60,6 +60,9 @@ def main() -> None:
     if want("fleet"):
         fleet_sweep.run(events=5_000 if args.quick else 20_000,
                         csv_rows=csv_rows)
+    if want("hetero"):
+        fleet_sweep.run_hetero(events=5_000 if args.quick else 20_000,
+                               autoscale=True, csv_rows=csv_rows)
     if want("roofline"):
         roofline_report.run(csv_rows=csv_rows)
         roofline_report.run(mesh="pod2", csv_rows=csv_rows)

@@ -59,6 +59,23 @@ class HardwareSpec:
         """Systolic pipeline fill paid once per distinct kernel launch."""
         return self.mxu_dim / self.mxu_freq_hz
 
+    def scaled(self, factor: float, name: Optional[str] = None) -> "HardwareSpec":
+        """A same-architecture chip at ``factor`` x this one's throughput
+        (an older or down-binned generation): the compute/memory/ICI roofs
+        scale, the per-launch overheads (dispatch, context switch, pipe
+        fill) do NOT — which is exactly why slower chips lose *more* to
+        time-sliced multiplexing and heterogeneous fleets need
+        speed-aware routing (see ``repro.sim.fleet``)."""
+        if factor <= 0.0:
+            raise ValueError(f"scale factor must be > 0, got {factor}")
+        return dataclasses.replace(
+            self,
+            name=name or f"{self.name}_x{factor:g}",
+            peak_flops=self.peak_flops * factor,
+            hbm_bw=self.hbm_bw * factor,
+            ici_bw=self.ici_bw * factor,
+        )
+
 
 TPU_V5E = HardwareSpec()
 

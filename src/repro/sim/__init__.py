@@ -7,19 +7,35 @@ roofline prior or an online-calibrated measured-cost table (``costmodel``)
 and outcomes reduced to SLO/latency/goodput/isolation metrics with
 deterministic JSON export (``metrics``). ``fleet`` + ``router`` scale the
 same machinery to N replicas behind a routing policy, with per-replica
-compile-cache cold-start accounting. Policy sweeps over millions of
-events run in seconds on CPU — and in CI.
+compile-cache cold-start accounting; replicas can be heterogeneous (one
+``HardwareSpec`` each), elastic (``autoscale`` spins them up cold and
+down deterministically), and individually calibrated
+(``FleetCalibrator`` tables keyed by replica id). Policy sweeps over
+millions of events run in seconds on CPU — and in CI.
 """
 
+from repro.sim.autoscale import (  # noqa: F401
+    Autoscaler,
+    BacklogAutoscaler,
+    ScaleEvent,
+    make_autoscaler,
+)
 from repro.sim.costmodel import (  # noqa: F401
+    HARDWARE_SPECS,
     STRATEGIES,
     CalibratedCostModel,
     ColdStartCostModel,
+    FleetCalibrator,
     RooflineCostModel,
     batch_key,
     estimate_capacity_hz,
+    resolve_spec,
 )
-from repro.sim.fleet import FleetSimulator, simulate_fleet  # noqa: F401
+from repro.sim.fleet import (  # noqa: F401
+    FleetSimulator,
+    fleet_capacity_hz,
+    simulate_fleet,
+)
 from repro.sim.metrics import (  # noqa: F401
     FleetMetrics,
     MetricsAccumulator,

@@ -61,6 +61,28 @@ from repro.launch.roofline import TPU_V5E, HardwareSpec
 # canonical strategy names, worst-to-best throughput (display order too)
 STRATEGIES = ("time_only", "space_only", "space_time", "exclusive")
 
+# named chips for heterogeneous-fleet CLIs (``fleet_sweep --specs ...``):
+# the current generation plus derated older generations of the same
+# architecture — launch overheads identical, roofs scaled (see
+# ``HardwareSpec.scaled``)
+HARDWARE_SPECS: Dict[str, HardwareSpec] = {
+    "v5e": TPU_V5E,
+    "v5e_half": TPU_V5E.scaled(0.5, name="v5e_half"),
+    "v5e_quarter": TPU_V5E.scaled(0.25, name="v5e_quarter"),
+}
+
+
+def resolve_spec(spec) -> HardwareSpec:
+    """Accept a ``HardwareSpec`` or a ``HARDWARE_SPECS`` name."""
+    if isinstance(spec, HardwareSpec):
+        return spec
+    try:
+        return HARDWARE_SPECS[spec]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown hardware spec {spec!r} "
+            f"(names: {sorted(HARDWARE_SPECS)})") from None
+
 
 def _flops(w) -> float:
     # explicit None check: flops == 0.0 is a valid value (pure data
@@ -194,6 +216,17 @@ class CalibratedCostModel:
         """True if this batch would be priced from data, not the prior."""
         return batch_key(batch) in self.table
 
+    def item_s(self, w) -> float:
+        """Marginal seconds of joining an already-forming batch of ``w``'s
+        bucket. Fitted entries are WHOLE-dispatch costs, not increments,
+        so the marginal term delegates to the prior's roofline marginal —
+        routers pricing through a calibrated table keep seeing the
+        merge-economy discount instead of a full solo dispatch."""
+        prior_item = getattr(self.prior, "item_s", None)
+        if prior_item is not None:
+            return prior_item(w)
+        return self((w,))
+
     # ----------------------------------------------------------- persistence
     def to_json(self) -> str:
         return json.dumps(
@@ -224,6 +257,96 @@ class CalibratedCostModel:
     def load(cls, path: str,
              prior: Optional[Callable[[Sequence], float]] = None,
              ) -> "CalibratedCostModel":
+        with open(path) as fh:
+            return cls.from_json(fh.read(), prior=prior)
+
+
+class FleetCalibrator:
+    """Per-replica ``CalibratedCostModel`` tables behind ONE dispatch tap.
+
+    On a heterogeneous fleet one fleet-wide table is wrong by
+    construction: the same (bucket, pow2-R) dispatch takes 2x longer on a
+    half-speed chip, so blending replicas' observations fits a cost no
+    replica actually has. This keeps one table per ``replica_id`` —
+    ``observe`` (the scheduler ``on_dispatch`` signature, replica identity
+    included) routes each measurement to its replica's table, and
+    ``for_replica`` hands the fleet simulator a per-replica pricing model
+    routers consult, so a calibrated fleet converges toward each chip's
+    MEASURED costs even when the shared prior is wrong for it.
+
+    Tables are created lazily on first sight of a replica id, which makes
+    autoscaled fleets (fresh replica ids mid-run) work unchanged; the
+    JSON round-trip (``save``/``load``) persists every table keyed by
+    replica id, counts included, same warm-resume contract as
+    ``CalibratedCostModel``.
+    """
+
+    def __init__(
+        self,
+        prior: Optional[Callable[[Sequence], float]] = None,
+        ewma_alpha: float = 0.2,
+    ):
+        self.prior = prior
+        self.alpha = ewma_alpha
+        self.models: Dict[int, CalibratedCostModel] = {}
+
+    @staticmethod
+    def _rid(replica_id: Optional[int]) -> int:
+        # solo schedulers tap with replica_id=None; file one table for them
+        return -1 if replica_id is None else int(replica_id)
+
+    def for_replica(self, replica_id: Optional[int]) -> CalibratedCostModel:
+        rid = self._rid(replica_id)
+        model = self.models.get(rid)
+        if model is None:
+            model = CalibratedCostModel(prior=self.prior,
+                                        ewma_alpha=self.alpha)
+            self.models[rid] = model
+        return model
+
+    def observe(self, batch: Sequence, seconds: float,
+                replica_id: Optional[int] = None) -> None:
+        """Scheduler ``on_dispatch`` tap: fold one measured dispatch into
+        the dispatching replica's table."""
+        self.for_replica(replica_id).observe(batch, seconds)
+
+    def coverage(self, batch: Sequence, replica_id: Optional[int]) -> bool:
+        model = self.models.get(self._rid(replica_id))
+        return model is not None and model.coverage(batch)
+
+    @property
+    def observations(self) -> int:
+        return sum(sum(m.counts.values()) for m in self.models.values())
+
+    # ----------------------------------------------------------- persistence
+    def to_json(self) -> str:
+        return json.dumps(
+            {"ewma_alpha": self.alpha,
+             "replicas": {str(rid): json.loads(m.to_json())
+                          for rid, m in sorted(self.models.items())}},
+            indent=2, sort_keys=True)
+
+    def save(self, path: str) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            fh.write(self.to_json())
+        os.replace(tmp, path)
+
+    @classmethod
+    def from_json(cls, text: str,
+                  prior: Optional[Callable[[Sequence], float]] = None,
+                  ) -> "FleetCalibrator":
+        data = json.loads(text)
+        calib = cls(prior=prior, ewma_alpha=data.get("ewma_alpha", 0.2))
+        for rid, doc in data.get("replicas", {}).items():
+            calib.models[int(rid)] = CalibratedCostModel.from_json(
+                json.dumps(doc), prior=prior)
+        return calib
+
+    @classmethod
+    def load(cls, path: str,
+             prior: Optional[Callable[[Sequence], float]] = None,
+             ) -> "FleetCalibrator":
         with open(path) as fh:
             return cls.from_json(fh.read(), prior=prior)
 

@@ -14,16 +14,36 @@ cross-replica event ordering is exact, not quantized per replica. Routing
 decisions therefore observe every replica's true state as of the
 arrival's trace time.
 
-Cold starts are what couple routing to scheduling: each replica wraps the
-shared base cost model in its own ``ColdStartCostModel``, so the first
-dispatch of a (bucket, pow2-R) variant on a given replica pays a compile
-term — spreading a tenant across the fleet multiplies compiles, pinning
-it concentrates load. That is the JSQ-vs-affinity trade the routers and
+Cold starts are what couple routing to scheduling: each replica wraps its
+base cost model in its own ``ColdStartCostModel``, so the first dispatch
+of a (bucket, pow2-R) variant on a given replica pays a compile term —
+spreading a tenant across the fleet multiplies compiles, pinning it
+concentrates load. That is the JSQ-vs-affinity trade the routers and
 ``benchmarks/fleet_sweep.py`` measure.
 
-Determinism: routers are pure functions of replica state, replica state
-is driven by seeded traces and virtual clocks — one seed, byte-identical
-fleet metrics JSON, same contract as the solo simulator.
+Three fleet-scale axes beyond PR 3's identical-replica grid:
+
+* **Heterogeneity** — ``specs`` gives each replica its own
+  ``HardwareSpec`` (cycled: ``["v5e", "v5e_half"]`` alternates fast and
+  half-speed chips), so each replica prices work through its OWN roofline
+  and speed-aware routers (``least_cost``) see the difference. A
+  load-oblivious router wastes the fast chips exactly as D-STACK predicts.
+* **Elasticity** — an ``Autoscaler`` (``repro.sim.autoscale``) is polled
+  at fixed simulated-time ticks; scale-up spawns a FRESH replica (new id,
+  EMPTY compile cache — the full cold-start bill — and an optional
+  ``spinup_s`` before it takes work), scale-down retires the newest
+  replica, which drains what it already owns but receives nothing new.
+  Every decision lands in ``scale_events`` and the metrics JSON.
+* **Per-replica calibration** — a ``FleetCalibrator`` taps every
+  replica's ``on_dispatch`` (the scheduler forwards ``replica_id``) into
+  per-replica ``CalibratedCostModel`` tables, and each replica routes
+  through its own table (``ReplicaPump.route_model``): even with a wrong
+  shared prior, routing converges toward each chip's measured costs.
+
+Determinism: routers and autoscalers are pure functions of replica state,
+replica state is driven by seeded traces and virtual clocks — one seed,
+byte-identical fleet metrics JSON, scale events included; same contract
+as the solo simulator.
 """
 
 from __future__ import annotations
@@ -34,21 +54,61 @@ import numpy as np
 
 from repro.config import ScheduleConfig
 from repro.core.clock import VirtualClock
-from repro.sim.costmodel import ColdStartCostModel, RooflineCostModel
+from repro.launch.roofline import TPU_V5E, HardwareSpec
+from repro.sim.autoscale import Autoscaler, ScaleEvent, make_autoscaler
+from repro.sim.costmodel import (
+    ColdStartCostModel,
+    FleetCalibrator,
+    RooflineCostModel,
+    estimate_capacity_hz,
+    resolve_spec,
+)
 from repro.sim.metrics import FleetMetrics, MetricsAccumulator
 from repro.sim.router import Router, make_router
 from repro.sim.simulator import ReplicaPump, SimWorkload
 from repro.sim.traces import Arrival, Trace
 
 
+def fleet_capacity_hz(
+    mix: Sequence,
+    specs: Sequence[Union[str, HardwareSpec]],
+    strategy: str = "space_time",
+) -> float:
+    """Aggregate sustainable arrivals/s of a heterogeneous fleet: the sum
+    of each replica's ``estimate_capacity_hz`` under its own spec — the
+    anchor hetero sweeps use so a mixed fleet and its equal-aggregate
+    homogeneous twin see the same offered load."""
+    return sum(
+        estimate_capacity_hz(
+            mix, RooflineCostModel(spec=resolve_spec(s), strategy=strategy))
+        for s in specs)
+
+
 class FleetSimulator:
     """N replicas of the real scheduler behind a router, one timeline.
 
-    ``cost_model`` is the SHARED stateless base (roofline or calibrated);
-    when ``compile_s > 0`` each replica wraps it in its own
-    ``ColdStartCostModel`` — per-replica warm caches. ``compile_s=0``
-    turns cold-start modeling off (replicas still price work through the
-    base model).
+    Replica pricing, pick ONE of:
+
+    * ``cost_model`` — a SHARED stateless base (roofline or calibrated)
+      every replica wraps: the homogeneous fleet.
+    * ``specs`` — per-replica hardware (``HardwareSpec`` instances or
+      ``HARDWARE_SPECS`` names, cycled over the fleet); replica ``i``
+      prices through ``RooflineCostModel(spec=specs[i % len], strategy)``:
+      the heterogeneous fleet.
+
+    When ``compile_s > 0`` each replica additionally wraps its base in
+    its own ``ColdStartCostModel`` — per-replica warm caches
+    (``compile_s=0`` turns cold-start modeling off).
+
+    ``autoscaler`` (an ``Autoscaler`` or factory name) makes the fleet
+    elastic: ``replicas`` then sets the INITIAL size and the policy's
+    min/max bound the rest. ``calibration`` (a ``FleetCalibrator``) wires
+    every replica's dispatch tap into per-replica measured-cost tables
+    that routing then prices through.
+
+    One-shot: state (routed counts, scale events, calibration tables)
+    accumulates across ``run`` — build a fresh instance per trace, or use
+    ``simulate_fleet``.
     """
 
     def __init__(
@@ -59,36 +119,135 @@ class FleetSimulator:
         cost_model: Optional[Callable[[Sequence], float]] = None,
         compile_s: float = 1e-3,
         start_s: float = 0.0,
+        specs: Optional[Sequence[Union[str, HardwareSpec]]] = None,
+        strategy: str = "space_time",
+        autoscaler: Optional[Union[Autoscaler, str]] = None,
+        calibration: Optional[FleetCalibrator] = None,
     ):
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if specs is not None and cost_model is not None:
+            raise ValueError(
+                "pass per-replica specs OR a shared cost_model, not both")
+        if specs is not None and not specs:
+            raise ValueError("specs must be non-empty when given")
         self.router = make_router(router) if isinstance(router, str) else router
+        self.schedule = schedule
         self.start_s = float(start_s)
-        base = cost_model or RooflineCostModel()
-        self.pumps: List[ReplicaPump] = []
-        for i in range(replicas):
-            clock = VirtualClock(start_s)
-            model: Callable[[Sequence], float] = base
-            if compile_s > 0.0:
-                model = ColdStartCostModel(base, compile_s=compile_s,
-                                           clock=clock)
-            pump = ReplicaPump(schedule=schedule, cost_model=model,
-                               clock=clock, replica_id=i)
-            pump.track_inflight = True  # routers read occupancy in fleet time
-            self.pumps.append(pump)
-        self.routed_counts = [0] * replicas
+        self.compile_s = float(compile_s)
+        self.strategy = strategy
+        self.specs = [resolve_spec(s) for s in specs] if specs else None
+        self._shared_base = cost_model
+        self.autoscaler = (make_autoscaler(autoscaler)
+                           if isinstance(autoscaler, str) else autoscaler)
+        self.calibration = calibration
+
+        self.pumps: List[ReplicaPump] = []       # every replica ever live
+        self.active: List[ReplicaPump] = []      # currently routable
+        self._retired: List[ReplicaPump] = []    # scaled down, may drain
+        self.routed_counts: List[int] = []       # indexed by replica_id
+        self.scale_events: List[ScaleEvent] = []
+        self._fleet_acc = MetricsAccumulator()
+        self._replica_accs: List[MetricsAccumulator] = []
+        self._next_id = 0
+        for _ in range(replicas):
+            self._spawn(self.start_s)
+
+    # -------------------------------------------------------- replica pool
+    def _base_model(self, replica_id: int) -> Callable[[Sequence], float]:
+        if self.specs is not None:
+            return RooflineCostModel(
+                spec=self.specs[replica_id % len(self.specs)],
+                strategy=self.strategy)
+        return self._shared_base or RooflineCostModel()
+
+    def _spawn(self, t_s: float) -> ReplicaPump:
+        """Bring up one replica whose clock starts at ``t_s`` — at init
+        that is the fleet epoch; mid-run it is the scale-up instant (plus
+        spin-up), and the fresh ``ColdStartCostModel`` means every variant
+        recompiles on it: spinning up pays the full cold cache."""
+        i = self._next_id
+        self._next_id += 1
+        base = self._base_model(i)
+        clock = VirtualClock(t_s)
+        model: Callable[[Sequence], float] = base
+        if self.compile_s > 0.0:
+            model = ColdStartCostModel(base, compile_s=self.compile_s,
+                                       clock=clock)
+        pump = ReplicaPump(schedule=self.schedule, cost_model=model,
+                           clock=clock, replica_id=i)
+        pump.track_inflight = True  # routers read occupancy in fleet time
+        spec = getattr(base, "spec", None)
+        if spec is not None:
+            pump.spec_name = spec.name
+            # relative chip speed: the weighted-affinity routing signal
+            pump.speed_factor = spec.peak_flops / TPU_V5E.peak_flops
+        if self.calibration is not None:
+            pump.scheduler.on_dispatch = self._calibration_tap(model)
+            pump.route_model = self.calibration.for_replica(i)
+        acc = MetricsAccumulator()
+        pump.accs = [self._fleet_acc, acc]
+        self.pumps.append(pump)
+        self.active.append(pump)
+        self.routed_counts.append(0)
+        self._replica_accs.append(acc)
+        return pump
+
+    def _calibration_tap(self, model):
+        """Dispatch tap that fits WARM costs: a cold dispatch's measured
+        seconds include the one-off compile term, and folding that into
+        the table would make a replica price a key HIGHER right after
+        compiling it (inverting warm-cache affinity — the first
+        observation per key is by construction the cold one). The
+        cold-start wrapper knows which dispatches were cold, so the tap
+        subtracts its compile term before the calibrator sees them."""
+        calibration = self.calibration
+        if not isinstance(model, ColdStartCostModel):
+            return calibration.observe
+
+        def tap(batch, seconds, replica_id):
+            if model.dispatch_cold and model.dispatch_cold[-1]:
+                seconds -= model.compile_s
+            calibration.observe(batch, seconds, replica_id)
+
+        return tap
+
+    def _apply_autoscale(self, now: float) -> None:
+        scaler = self.autoscaler
+        target = scaler.decide(self.active, now)
+        signal = float(getattr(scaler, "last_signal", 0.0))
+        while len(self.active) < target:
+            p = self._spawn(now + scaler.spinup_s)
+            self.scale_events.append(ScaleEvent(
+                t_s=now, action="up", replica_id=p.replica_id,
+                active=len(self.active), signal=signal))
+        while len(self.active) > max(target, 1):
+            # retire the newest replica: keeps the longest-warmed caches
+            # alive and makes up/down sequences deterministic
+            p = self.active.pop()
+            self._retired.append(p)
+            self.scale_events.append(ScaleEvent(
+                t_s=now, action="down", replica_id=p.replica_id,
+                active=len(self.active), signal=signal))
 
     # ------------------------------------------------------------ event loop
     def _drain_until(self, t_limit: float) -> None:
         """Merged global timeline: pump whichever replica ripens earliest,
-        repeatedly, until no replica ripens before ``t_limit``.
+        repeatedly, until no replica ripens before ``t_limit``. Covers ALL
+        replicas — a scaled-down replica no longer receives arrivals but
+        still drains what it owns.
 
         A replica whose ripeness estimate fails to dispatch (slack-aware
         window shrank underneath it) is stalled until the next arrival —
         the same per-replica semantics as the solo drain loop, without
         letting one stalled replica block the others.
         """
-        pumps = self.pumps
+        # a retired replica with a dry queue can never ripen again; skip
+        # it so heavy autoscale cycling doesn't grow the per-event scan
+        pumps = self.active
+        if self._retired:
+            pumps = pumps + [p for p in self._retired
+                             if len(p.scheduler.queue)]
         stalled = 0  # bitmask — replica counts are small
         while True:
             best_i, best_t = -1, t_limit
@@ -104,23 +263,26 @@ class FleetSimulator:
                 stalled |= 1 << best_i
 
     def run(self, trace: Union[Trace, Iterable[Arrival]]) -> FleetMetrics:
-        pumps, router = self.pumps, self.router
-        fleet_acc = MetricsAccumulator()
-        replica_accs = [MetricsAccumulator() for _ in pumps]
-        for p, acc in zip(pumps, replica_accs):
-            p.accs = [fleet_acc, acc]
+        router, scaler = self.router, self.autoscaler
         t_start = self.start_s
+        next_tick = t_start + scaler.interval_s if scaler is not None else None
 
         for t_s, spec, cost in trace:
+            while next_tick is not None and t_s >= next_tick:
+                self._drain_until(next_tick)
+                self._apply_autoscale(next_tick)
+                next_tick += scaler.interval_s
             self._drain_until(t_s)
-            idx = router.route(spec, pumps, t_s)
+            idx = router.route(spec, self.active, t_s)
+            pump = self.active[idx]
             w = SimWorkload(spec, cost)
-            w.est_s = pumps[idx].estimate_item_s(w)
-            if pumps[idx].submit(w, t_s):
-                self.routed_counts[idx] += 1
+            w.est_s = pump.estimate_item_s(w)
+            if pump.submit(w, t_s):
+                self.routed_counts[pump.replica_id] += 1
 
         # tail: keep merging ripeness instants until every queue is dry,
         # then force-flush whatever the estimates could not ripen
+        pumps = self.pumps
         while any(len(p.scheduler.queue) for p in pumps):
             before = sum(len(p.scheduler.queue) for p in pumps)
             self._drain_until(float("inf"))
@@ -130,12 +292,18 @@ class FleetSimulator:
                         p._absorb(p.scheduler.flush())
                 break
 
-        # fleet horizon: the makespan across replicas; every replica's
-        # utilization is reported against it so the spread is meaningful
-        horizon = max(p.clock.now() for p in pumps) - t_start
-        merged = self._freeze_merged(fleet_acc, horizon)
+        # fleet horizon: the makespan across replicas that actually
+        # dispatched; every replica's utilization is reported against it
+        # so the spread is meaningful. A spun-up replica that never took
+        # work keeps its future-dated (spawn + spin-up) clock and must
+        # not stretch the horizon — that would deflate every per-second
+        # metric for work the fleet finished long before.
+        horizon = max((p.clock.now() for p in pumps
+                       if p.scheduler.stats.dispatches > 0),
+                      default=t_start) - t_start
+        merged = self._freeze_merged(self._fleet_acc, horizon)
         per_replica = [p.freeze(acc, sim_duration_s=horizon)
-                       for p, acc in zip(pumps, replica_accs)]
+                       for p, acc in zip(pumps, self._replica_accs)]
         cold_times, cold_flags = self._cold_series()
         return FleetMetrics(
             merged=merged,
@@ -144,6 +312,9 @@ class FleetSimulator:
             router=self.router.name,
             cold_times=cold_times,
             cold_flags=cold_flags,
+            scale_events=self.scale_events,
+            replica_specs=[p.spec_name for p in pumps],
+            final_active=len(self.active),
         )
 
     # ------------------------------------------------------------- internals
@@ -184,9 +355,14 @@ def simulate_fleet(
     schedule: Optional[ScheduleConfig] = None,
     cost_model: Optional[Callable[[Sequence], float]] = None,
     compile_s: float = 1e-3,
+    specs: Optional[Sequence[Union[str, HardwareSpec]]] = None,
+    strategy: str = "space_time",
+    autoscaler: Optional[Union[Autoscaler, str]] = None,
+    calibration: Optional[FleetCalibrator] = None,
 ) -> FleetMetrics:
     """One-shot convenience wrapper: fresh fleet, one trace, metrics."""
     return FleetSimulator(
         replicas, router=router, schedule=schedule, cost_model=cost_model,
-        compile_s=compile_s,
+        compile_s=compile_s, specs=specs, strategy=strategy,
+        autoscaler=autoscaler, calibration=calibration,
     ).run(trace)

@@ -17,6 +17,7 @@ JSON — the determinism contract the tests pin.
 from __future__ import annotations
 
 import json
+import math
 from array import array
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -204,37 +205,82 @@ class FleetMetrics:
     ``(virtual seconds, was_cold)`` series across replicas — the warm-up
     curve; ``cold_fraction_halves()`` splits it at the fleet horizon
     midpoint (cold fraction must decay as caches warm).
+
+    ``scale_events`` is the autoscale timeline (one dict per decision
+    that changed the fleet), ``replica_specs`` names each replica's
+    hardware (heterogeneous fleets), and ``final_active`` is the replica
+    count still receiving arrivals when the trace ended — all part of the
+    deterministic JSON, so the byte-identical contract covers elasticity
+    too. Every fleet-signal accessor is total: empty or single-completion
+    windows (a replica spun up at the very end, a trace with no
+    arrivals) yield defined 0.0 values, never NaN in BENCH JSON.
     """
 
     def __init__(self, merged: SimMetrics, per_replica: List[SimMetrics],
                  routed_counts: Sequence[int], router: str,
-                 cold_times: np.ndarray, cold_flags: np.ndarray):
+                 cold_times: np.ndarray, cold_flags: np.ndarray,
+                 scale_events: Optional[Sequence] = None,
+                 replica_specs: Optional[Sequence[Optional[str]]] = None,
+                 final_active: Optional[int] = None):
         self.merged = merged
         self.per_replica = per_replica
         self.routed_counts = np.asarray(routed_counts, np.int64)
         self.router = router
         self.cold_times = np.asarray(cold_times, np.float64)
         self.cold_flags = np.asarray(cold_flags, np.int64)
+        # normalize to plain dicts so to_json stays canonical
+        self.scale_events: List[Dict] = [
+            e.to_dict() if hasattr(e, "to_dict") else dict(e)
+            for e in (scale_events or [])]
+        self.replica_specs: List[Optional[str]] = (
+            list(replica_specs) if replica_specs is not None
+            else [None] * len(per_replica))
+        self.final_active = (len(per_replica) if final_active is None
+                             else int(final_active))
 
     @property
     def replicas(self) -> int:
+        """Replicas that were ever live (autoscaled fleets: spawned)."""
         return len(self.per_replica)
 
+    @property
+    def initial_replicas(self) -> int:
+        """Fleet size at trace start (every scale-up spawned one more)."""
+        return len(self.per_replica) - self.scale_ups
+
+    @property
+    def scale_ups(self) -> int:
+        return sum(1 for e in self.scale_events if e["action"] == "up")
+
+    @property
+    def scale_downs(self) -> int:
+        return sum(1 for e in self.scale_events if e["action"] == "down")
+
     # ------------------------------------------------------- fleet signals
+    # Every accessor below must be total over degenerate windows: an empty
+    # fleet section, a single completion, or a replica that never routed
+    # returns a defined 0.0 — these numbers flow verbatim into gated BENCH
+    # JSON, where one NaN poisons every downstream comparison.
     @property
     def utilization_spread(self) -> float:
         """max - min per-replica utilization (0 = perfectly even work)."""
         utils = [m.utilization for m in self.per_replica]
-        return float(max(utils) - min(utils)) if utils else 0.0
+        if not utils:
+            return 0.0
+        spread = float(max(utils) - min(utils))
+        return spread if math.isfinite(spread) else 0.0
 
     @property
     def routing_imbalance(self) -> float:
         """Coefficient of variation of per-replica routed arrival counts
         (0 = perfectly balanced; round-robin's floor)."""
         c = self.routed_counts.astype(np.float64)
-        if c.size == 0 or c.mean() == 0.0:
+        if c.size == 0:
             return 0.0
-        return float(c.std() / c.mean())
+        mean = float(c.mean())
+        if mean <= 0.0:
+            return 0.0
+        return float(c.std() / mean)
 
     @property
     def cold_start_fraction(self) -> float:
@@ -245,7 +291,9 @@ class FleetMetrics:
 
     def cold_fraction_halves(self) -> Tuple[float, float]:
         """Cold-dispatch fraction in the first vs second half of the fleet
-        horizon — the warm-up decay the tests pin."""
+        horizon — the warm-up decay the tests pin. Windows with no
+        dispatches (empty trace; a single dispatch leaves the second half
+        empty) contribute a defined 0.0, not a NaN mean."""
         if self.cold_times.size == 0:
             return 0.0, 0.0
         mid = (float(self.cold_times.min()) + float(self.cold_times.max())) / 2.0
@@ -266,6 +314,9 @@ class FleetMetrics:
                 np.mean([m.utilization for m in self.per_replica])
             ) if self.per_replica else 0.0,
             "replicas": float(self.replicas),
+            "final_active": float(self.final_active),
+            "scale_ups": float(self.scale_ups),
+            "scale_downs": float(self.scale_downs),
             "routing_imbalance": self.routing_imbalance,
             "utilization_spread": self.utilization_spread,
             "cold_start_fraction": self.cold_start_fraction,
@@ -294,16 +345,31 @@ class FleetMetrics:
             (f"{prefix}/cold_fraction", self.cold_start_fraction * 100.0,
              "pct dispatches compiling"),
         ])
+        if self.scale_events:
+            rows.extend([
+                (f"{prefix}/scale_events", float(len(self.scale_events)),
+                 "autoscale decisions applied"),
+                (f"{prefix}/final_active", float(self.final_active),
+                 "replicas active at trace end"),
+            ])
         return rows
 
     def to_dict(self) -> Dict:
         doc = self.merged.to_dict()
         doc["summary"] = self.summary()
-        doc["per_replica"] = {
-            str(i): m.summary() for i, m in enumerate(self.per_replica)
-        }
+        per_replica = {}
+        for i, m in enumerate(self.per_replica):
+            entry = m.summary()
+            entry["routed"] = float(self.routed_counts[i]) \
+                if i < self.routed_counts.size else 0.0
+            spec = self.replica_specs[i] if i < len(self.replica_specs) else None
+            if spec is not None:
+                entry["spec"] = spec
+            per_replica[str(i)] = entry
+        doc["per_replica"] = per_replica
         doc["routed_counts"] = [int(c) for c in self.routed_counts]
         doc["router"] = self.router
+        doc["scale_events"] = self.scale_events
         return doc
 
     def to_json(self) -> str:

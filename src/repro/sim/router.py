@@ -20,11 +20,18 @@ The four policies span the classic trade-off surface:
                     affinity, so it lands hot shapes on replicas that
                     already compiled them unless the queue gap says
                     otherwise.
-    affinity     -- tenant-sticky (session affinity): tenant t pins to
-                    replica t mod N, which maximizes warm-cache reuse and
-                    per-tenant ordering, spilling JSQ-style only when the
-                    pinned replica's queue is badly out of line. The
-                    D-STACK-ish "keep a tenant's state where it is" play.
+    affinity     -- tenant-sticky (session affinity): each tenant pins to
+                    one replica via rendezvous (highest-random-weight)
+                    hashing over the live replica ids, which maximizes
+                    warm-cache reuse and per-tenant ordering, spilling
+                    JSQ-style only when the pinned replica's queue is
+                    badly out of line. The D-STACK-ish "keep a tenant's
+                    state where it is" play — and because the pin is a
+                    pure function of (tenant, replica id), an autoscale
+                    event only remaps the tenants whose winning replica
+                    actually appeared or vanished, not the whole fleet
+                    (the old ``t mod N`` pinning remapped ~everyone on
+                    every change of N, flushing every warm cache at once).
 
 ``route`` receives the list of ``ReplicaPump``s (``repro.sim.simulator``)
 — the routing signals are methods on the pump: ``queue_depth()``,
@@ -33,6 +40,7 @@ The four policies span the classic trade-off surface:
 
 from __future__ import annotations
 
+import math
 from typing import Sequence
 
 ROUTERS = ("round_robin", "jsq", "least_cost", "affinity")
@@ -57,8 +65,10 @@ class RoundRobinRouter(Router):
         self._next = 0
 
     def route(self, w, replicas, now) -> int:
-        idx = self._next
-        self._next = (idx + 1) % len(replicas)
+        # mod at route time, not store time: the replica count is elastic
+        # under autoscaling, and a stored index can outlive a scale-down
+        idx = self._next % len(replicas)
+        self._next = idx + 1
         return idx
 
 
@@ -101,12 +111,31 @@ class LeastEstimatedCostRouter(Router):
         )
 
 
+_HASH_MASK = (1 << 64) - 1
+
+
+def _hrw_weight(tenant_id: int, replica_id: int) -> int:
+    """Deterministic 64-bit mix of (tenant, replica) — the rendezvous
+    score. splitmix64 finalizer over a golden-ratio combine: stable
+    across runs, Python versions, and platforms (``hash()`` is not)."""
+    x = (tenant_id * 0x9E3779B97F4A7C15
+         + replica_id * 0xBF58476D1CE4E5B9 + 1) & _HASH_MASK
+    x ^= x >> 30
+    x = (x * 0xBF58476D1CE4E5B9) & _HASH_MASK
+    x ^= x >> 27
+    x = (x * 0x94D049BB133111EB) & _HASH_MASK
+    return x ^ (x >> 31)
+
+
 class TenantAffinityRouter(Router):
-    """Session-sticky: tenant t pins to replica ``t mod N`` (maximal
-    warm-cache reuse), spilling to the shortest queue only when the
-    pinned replica's queue exceeds ``spill_factor`` x the fleet's
-    shortest queue (plus a small absolute grace so near-empty fleets
-    never spill)."""
+    """Session-sticky via weighted rendezvous hashing: tenant t pins to
+    the live replica with the best capacity-weighted
+    ``_hrw_weight(t, replica_id)`` score (maximal warm-cache reuse,
+    minimal remapping when the replica set changes, and faster chips win
+    proportionally more tenants on heterogeneous fleets), spilling to the
+    shortest queue only when the pinned replica's queue exceeds
+    ``spill_factor`` x the fleet's shortest queue (plus a small absolute
+    grace so near-empty fleets never spill)."""
 
     name = "affinity"
 
@@ -116,8 +145,31 @@ class TenantAffinityRouter(Router):
         self.spill_factor = spill_factor
         self.spill_grace = spill_grace
 
+    @staticmethod
+    def pin(w, replicas) -> int:
+        """Index of the tenant's rendezvous winner among ``replicas``.
+
+        Keyed on each replica's stable ``replica_id`` (falling back to its
+        position for bare sequences), so the pin survives the list
+        reshuffling that scale events cause — only tenants whose winner
+        joined or left the fleet move. Weighted a la Hash-Rendezvous-
+        Weighted (``log(u)/capacity``): a replica advertising
+        ``speed_factor`` 2.0 wins ~2x the tenants of a 1.0 replica, with
+        equal speeds reducing to plain rendezvous hashing."""
+        t = w.tenant_id
+
+        def score(i: int) -> float:
+            r = replicas[i]
+            rid = getattr(r, "replica_id", None)
+            u = (_hrw_weight(t, i if rid is None else rid) + 1) \
+                / float(1 << 64)  # uniform draw in (0, 1]
+            speed = getattr(r, "speed_factor", 1.0) or 1.0
+            return math.log(u) / speed
+
+        return max(range(len(replicas)), key=score)
+
     def route(self, w, replicas, now) -> int:
-        pinned = w.tenant_id % len(replicas)
+        pinned = self.pin(w, replicas)
         depth = replicas[pinned].queue_depth(now)
         shortest = min(range(len(replicas)),
                        key=lambda i: (replicas[i].queue_depth(now), i))

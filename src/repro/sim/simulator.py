@@ -106,6 +106,13 @@ class ReplicaPump:
         # metric sinks every completion is recorded into (solo: one; fleet:
         # the replica's own + the fleet-wide accumulator)
         self.accs: List[MetricsAccumulator] = []
+        # fleet-only: hardware label for per-replica summaries (hetero
+        # fleets), relative chip speed (weighted-affinity routing signal),
+        # and an optional ROUTING-time pricing model (per-replica
+        # calibrated table) — the true cost_model still drives the clock
+        self.spec_name: Optional[str] = None
+        self.speed_factor: float = 1.0
+        self.route_model: Optional[Callable[[Sequence], float]] = None
         # router's running backlog estimate: Σ est_s of pending items
         self.pending_est_s = 0.0
         # fleet-only (set by FleetSimulator): completion instants of
@@ -227,8 +234,14 @@ class ReplicaPump:
         forming super-kernel — marginal roofline cost only, compile shared
         with the batch. Otherwise it opens a fresh dispatch: full solo
         cost, plus the compile term when this replica's cache is cold for
-        the bucket (the warm-affinity signal)."""
-        model = self.cost_model
+        the bucket (the warm-affinity signal).
+
+        When a ``route_model`` is attached (fleet calibration: this
+        replica's measured-cost table), routing prices through IT instead
+        of the true model — the convergence loop that turns wrong priors
+        into measured per-replica costs."""
+        model = self.route_model if self.route_model is not None \
+            else self.cost_model
         if self.scheduler.queue.head(w.bucket) is not None:
             item_s = getattr(model, "item_s", None)
             if item_s is not None:

@@ -96,10 +96,14 @@ class TestRouters:
         assert pumps[0].queue_depth(now=6.0) == 0
 
     def test_affinity_pins_by_tenant(self):
+        """Each tenant sticks to ONE replica (rendezvous hash of tenant and
+        replica id — not position), and distinct tenants spread out."""
         r = make_router("affinity")
         pumps = _pumps(4)
-        assert r.route(MIX[5], pumps, 0.0) == 5 % 4
-        assert r.route(MIX[2], pumps, 0.0) == 2
+        pins = {s.tenant_id: r.route(s, pumps, 0.0) for s in MIX}
+        for s in MIX:  # idle fleet: the pin never wavers
+            assert r.route(s, pumps, 0.0) == pins[s.tenant_id]
+        assert len(set(pins.values())) > 1  # 12 tenants never herd onto one
 
     def test_affinity_spills_under_gross_imbalance(self):
         r = make_router("affinity", spill_factor=2.0, spill_grace=2)
