@@ -105,6 +105,16 @@ def main() -> None:
               f"({base_doc.get('benchmark')!r} vs {cur_doc.get('benchmark')!r})",
               file=sys.stderr)
         sys.exit(2)
+    # schema_version is informational, never gated: the comparison below
+    # only reads rows, but a version drift between baseline and current
+    # means the JSON layout evolved — say so instead of staying silent
+    # (older baselines predate the field; treat absent as "unversioned").
+    base_ver = base_doc.get("schema_version")
+    cur_ver = cur_doc.get("schema_version")
+    if base_ver != cur_ver:
+        print(f"note: metrics schema_version differs (baseline "
+              f"{base_ver!r} vs current {cur_ver!r}); rows are still "
+              f"compared, refresh the baseline to silence this")
 
     problems, gated = compare(_rows(base_doc), _rows(cur_doc), args.tolerance)
     bench = base_doc.get("benchmark", "?")

@@ -1,16 +1,20 @@
 """Section 4 claim: "overheads gradually decrease if we cache super-kernels
 as workloads stabilize over time."
 
+DEPRECATION SHIM: this script is now a thin caller of ``repro.api`` —
+the mix, the trace, and the simulated replay all come from one
+``SystemSpec`` (``workload.mix="single"``), so a live wall-clock run and
+``python -m repro simulate --set workload.mix=single ...`` see
+bit-identical arrival sequences. The argparse surface below is kept for
+existing callers; ``python -m repro calibrate`` is the spec-driven form
+of ``--calibrate``.
+
 Stochastic (Poisson) kernel arrivals from R tenants drive the dynamic
 scheduler; we report per-quarter mean latency, dispatch count and cache
 hit-rate. Expected: hit-rate -> ~1 and latency anneals after the first
 quarter (compiles amortized), demonstrating the super-kernel cache doing
 its job under non-stationary R.
 
-Arrivals come from the ``repro.sim`` trace generator replayed against the
-wall clock — the SAME seeded ``PoissonTrace`` the simulator consumes, so
-a live run and ``--simulate`` (virtual clock + roofline cost model, no
-device work) see bit-identical arrival sequences through one code path.
 A live run can additionally fit a ``CalibratedCostModel`` from its own
 measured dispatches (``--calibrate PATH``) for later simulated replay.
 
@@ -28,41 +32,25 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.config import ScheduleConfig
-from repro.configs.paper_sgemm import PAPER_GEMM_SHAPES
-from repro.core.queue import ShapeBucket
-from repro.sim import (
-    CalibratedCostModel,
-    PoissonTrace,
-    RooflineCostModel,
-    TenantSpec,
-    simulate,
-)
+from repro.api import SchedulerSpec, SystemSpec, WorkloadSpec, build_mix, build_trace
 
 # historical pacing: ~3 arrivals per 0.2ms tick of the old sleep loop
 RATE_HZ = 15_000.0
 ARRIVALS_PER_EVENT = 3
 
 
-def build_mix(tenants: int, slo_s: float) -> List[TenantSpec]:
-    """All tenants launch the paper's ResNet-18 conv2_2 SGEMM geometry
-    (the original trace's single-shape setting) under one tight SLO."""
-    g = PAPER_GEMM_SHAPES["resnet18_conv2_2"]
-    bucket = ShapeBucket("gemm", g.M, g.K, g.N, "float32")
-    return [
-        TenantSpec(
-            tenant_id=t, name=f"t{t}/{g.name}", bucket=bucket,
-            cost=float(g.flops), flops=float(g.flops),
-            bytes=float(4 * (g.M * g.K + g.K * g.N + g.M * g.N)),
-            slo_s=slo_s, kind="kernel",
-        )
-        for t in range(tenants)
-    ]
-
-
-def _schedule(policy: str) -> ScheduleConfig:
-    return ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32,
-                          batching_policy=policy)
+def build_spec(num_events: int, tenants: int, seed: int, policy: str,
+               slo_s: float) -> SystemSpec:
+    """The one spec both the live replay and the simulated replay run."""
+    return SystemSpec(
+        workload=WorkloadSpec(
+            mix="single", tenants=tenants, process="poisson",
+            events=ARRIVALS_PER_EVENT * num_events, seed=seed,
+            rate_hz=RATE_HZ, slo_s=slo_s),
+        scheduler=SchedulerSpec(batching_window_s=0.0005,
+                                max_superkernel_size=32,
+                                batching_policy=policy),
+    )
 
 
 def _print_quarters(lat: List[float], hit_marks: Optional[List[float]],
@@ -84,13 +72,11 @@ def _print_quarters(lat: List[float], hit_marks: Optional[List[float]],
 def run(num_events: int = 200, tenants: int = 12, seed: int = 0, csv_rows=None,
         policy: str = "fixed", slo_s: float = 0.010,
         simulate_only: bool = False, calibrate_path: Optional[str] = None):
-    mix = build_mix(tenants, slo_s)
-    trace = PoissonTrace(mix, RATE_HZ, events=ARRIVALS_PER_EVENT * num_events,
-                         seed=seed)
+    spec = build_spec(num_events, tenants, seed, policy, slo_s)
 
     if simulate_only:
         print(f"\n=== Dynamic trace (SIMULATED): policy={policy} ===")
-        m = simulate(trace, _schedule(policy), RooflineCostModel())
+        m = spec.build().run_metrics()
         _print_quarters(list(m.lat), None, f"sim/{policy}", csv_rows)
         s = m.summary()
         print(f"final: dispatches={s['dispatches']:.0f} "
@@ -103,22 +89,28 @@ def run(num_events: int = 200, tenants: int = 12, seed: int = 0, csv_rows=None,
     import jax.numpy as jnp
 
     from repro.core import DynamicSpaceTimeScheduler, GemmProblem
+    from repro.sim import CalibratedCostModel
+
+    mix = build_mix(spec.workload)
+    trace = build_trace(spec, mix)
 
     print(f"\n=== Dynamic trace: cache warm-up under stochastic arrivals "
           f"(policy={policy}) ===")
-    g = PAPER_GEMM_SHAPES["resnet18_conv2_2"]
+    g_bucket = mix[0].bucket  # all tenants share the one SGEMM geometry
     rng = np.random.default_rng(seed)
     key = jax.random.PRNGKey(seed)
 
     # device-resident per-tenant weights; fresh activations per query
-    ws = [jax.random.normal(jax.random.fold_in(key, t), (g.K, g.N), jnp.float32)
+    ws = [jax.random.normal(jax.random.fold_in(key, t),
+                            (g_bucket.K, g_bucket.N), jnp.float32)
           for t in range(tenants)]
-    xs = [jax.random.normal(jax.random.fold_in(key, 1000 + i), (g.M, g.K), jnp.float32)
+    xs = [jax.random.normal(jax.random.fold_in(key, 1000 + i),
+                            (g_bucket.M, g_bucket.K), jnp.float32)
           for i in range(8)]
 
     calibrated = CalibratedCostModel() if calibrate_path else None
     sched = DynamicSpaceTimeScheduler(
-        _schedule(policy),
+        spec.scheduler.to_schedule_config(),
         on_dispatch=calibrated.observe if calibrated else None,
     )
     lat: List[float] = []

@@ -1,5 +1,16 @@
 """Fleet sweep: replicas x router x strategy on the multi-replica simulator.
 
+DEPRECATION SHIM: this script is now a thin caller of the declarative
+``repro.api`` layer — one base ``SystemSpec`` per grid, ``replace()``d
+per cell and pinned to the ``FleetRun`` executor (the grid's r1 cells
+must report fleet metrics too). Prefer the unified CLI for new work:
+
+    PYTHONPATH=src python -m repro sweep --spec examples/specs/hetero_fleet.json \
+        --axis router.policy=round_robin,jsq,least_cost,affinity
+
+The argparse surface below is kept for the committed baselines and CI
+gates, which it reproduces byte-identically.
+
 Every cell drives the SAME seeded arrival trace through ``repro.sim.fleet``
 — N replicas of the real scheduler, each on its own virtual clock with its
 own compile-cache cold-start state, behind one routing policy. Bursty MMPP
@@ -45,35 +56,21 @@ import sys
 import time
 from typing import Dict, List, Optional
 
-from repro.config import ScheduleConfig
-from repro.launch.roofline import TPU_V5E
-from repro.sim import (
-    ROUTERS,
-    BacklogAutoscaler,
-    FleetMetrics,
-    RooflineCostModel,
-    estimate_capacity_hz,
-    fleet_capacity_hz,
-    fleet_sgemm_mix,
-    make_trace,
-    paper_sgemm_mix,
-    prefill_decode_mix,
-    resolve_spec,
-    simulate_fleet,
-    to_bench_json,
+from repro.api import (
+    AutoscaleSpec,
+    FleetRun,
+    FleetSpec,
+    RouterSpec,
+    SchedulerSpec,
+    SystemSpec,
+    WorkloadSpec,
+    build_mix,
+    resolve_rate_hz,
 )
+from repro.launch.roofline import TPU_V5E, resolve_spec
+from repro.sim import ROUTERS, FleetMetrics, to_bench_json
 
 STRATEGIES = ("time_only", "space_only", "space_time")
-
-
-def build_mix(name: str, tenants: int):
-    if name == "fleet":
-        return fleet_sgemm_mix(tenants)
-    if name == "sgemm":
-        return paper_sgemm_mix(tenants)
-    if name == "serving":
-        return prefill_decode_mix(tenants)
-    raise ValueError(f"unknown mix: {name!r}")
 
 
 def replica_grid(n_max: int) -> List[int]:
@@ -92,18 +89,25 @@ def run(events: int = 20_000, replicas: int = 4, tenants: int = 12,
         check: bool = False, json_path: Optional[str] = None,
         csv_rows=None) -> Dict[str, FleetMetrics]:
     t_wall = time.perf_counter()
-    mix = build_mix(mix_name, tenants)
-    compile_s = compile_us * 1e-6
-    sched = ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32)
     sections: Dict[str, FleetMetrics] = {}
     failures: List[str] = []
 
     # offered load anchored to the FULL fleet's space_time capacity, so the
     # smaller replica counts in the grid run overloaded — that is where the
     # goodput-vs-N scaling curve is visible
-    capacity_hz = estimate_capacity_hz(
-        mix, RooflineCostModel(strategy="space_time"))
-    offered_hz = rho * replicas * capacity_hz
+    base = SystemSpec(
+        workload=WorkloadSpec(mix=mix_name, tenants=tenants, process=process,
+                              events=events, seed=seed, rho=rho),
+        fleet=FleetSpec(replicas=replicas),
+        scheduler=SchedulerSpec(batching_window_s=0.0005,
+                                max_superkernel_size=32),
+    )
+    base = base.replace(**{"cost_model.compile_us": compile_us})
+    mix = build_mix(base.workload)
+    offered_hz = resolve_rate_hz(base, mix)
+    capacity_hz = resolve_rate_hz(
+        base.replace(**{"workload.rho": 1.0, "fleet.replicas": 1}), mix)
+    base = base.replace(**{"workload.rate_hz": offered_hz})
     grid = replica_grid(replicas)
 
     print(f"\n=== fleet_sweep: {events} events/cell, mix={mix_name}, "
@@ -113,11 +117,13 @@ def run(events: int = 20_000, replicas: int = 4, tenants: int = 12,
           f"(~{offered_hz:,.0f}/s); compile cold-start {compile_us:g}us")
 
     def run_cell(n: int, router: str, strategy: str) -> FleetMetrics:
-        trace = make_trace(process, mix, offered_hz, events, seed=seed)
-        return simulate_fleet(
-            trace, replicas=n, router=router, schedule=sched,
-            cost_model=RooflineCostModel(strategy=strategy),
-            compile_s=compile_s)
+        # pinned to FleetRun: the r1 cells of the grid must report fleet
+        # metrics (routing imbalance, cold fractions) like every other cell
+        return FleetRun(base.replace(**{
+            "fleet.replicas": n,
+            "router.policy": router,
+            "cost_model.strategy": strategy,
+        })).run_metrics()
 
     print(f"\n{'cell':>28s} {'p95 ms':>9s} {'attain':>7s} {'goodput':>10s} "
           f"{'imbal':>6s} {'util':>6s} {'cold%':>6s}")
@@ -208,9 +214,6 @@ def run_hetero(events: int = 20_000, replicas: int = 4,
                csv_rows=None) -> Dict[str, FleetMetrics]:
     """Heterogeneous + elastic fleet grid (see module docstring)."""
     t_wall = time.perf_counter()
-    mix = build_mix(mix_name, tenants)
-    compile_s = compile_us * 1e-6
-    sched = ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32)
     sections: Dict[str, FleetMetrics] = {}
     failures: List[str] = []
 
@@ -230,20 +233,28 @@ def run_hetero(events: int = 20_000, replicas: int = 4,
 
     # offered load anchored to the MIXED fleet's aggregate space_time
     # capacity; the twin sees the same trace, so the comparison is pure
-    capacity_hz = fleet_capacity_hz(mix, replica_specs)
-    offered_hz = rho * capacity_hz
+    base = SystemSpec(
+        workload=WorkloadSpec(mix=mix_name, tenants=tenants, process=process,
+                              events=events, seed=seed, rho=rho),
+        fleet=FleetSpec(replicas=replicas, specs=tuple(replica_specs)),
+        scheduler=SchedulerSpec(batching_window_s=0.0005,
+                                max_superkernel_size=32),
+    )
+    base = base.replace(**{"cost_model.compile_us": compile_us})
+    mix = build_mix(base.workload)
+    offered_hz = resolve_rate_hz(base, mix)
+    capacity_hz = resolve_rate_hz(base.replace(**{"workload.rho": 1.0}), mix)
+    base = base.replace(**{"workload.rate_hz": offered_hz})
 
     # autoscaler thresholds are SLO-denominated: scale up when the mean
     # replica is half a mid-tier SLO behind, down below a tenth of it
     slos = sorted(s.slo_s for s in mix)
     slo_mid = slos[len(slos) // 2]
     tick_s = 50.0 / offered_hz  # a control decision every ~50 arrivals
-
-    def scaler() -> BacklogAutoscaler:
-        return BacklogAutoscaler(
-            min_replicas=1, max_replicas=replicas,
-            up_backlog_s=slo_mid / 2.0, down_backlog_s=slo_mid / 10.0,
-            interval_s=tick_s, cooldown_ticks=2, spinup_s=spinup_us * 1e-6)
+    scaler_spec = AutoscaleSpec(
+        min_replicas=1, max_replicas=replicas,
+        up_backlog_s=slo_mid / 2.0, down_backlog_s=slo_mid / 10.0,
+        interval_s=tick_s, cooldown_ticks=2, spinup_s=spinup_us * 1e-6)
 
     print(f"\n=== fleet_hetero: {events} events/cell, mix={mix_name}, "
           f"process={process}, seed={seed} ===")
@@ -255,17 +266,16 @@ def run_hetero(events: int = 20_000, replicas: int = 4,
           + (f"; autoscale 1..{replicas} replicas, tick {tick_s*1e6:.0f}us"
              if autoscale else ""))
 
-    def trace():
-        return make_trace(process, mix, offered_hz, events, seed=seed)
-
     def run_cell(router: str, specs=None, n: int = replicas,
-                 autoscaler=None) -> FleetMetrics:
-        return simulate_fleet(
-            trace(), replicas=n, router=router, schedule=sched,
-            specs=specs, strategy="space_time",
-            cost_model=None if specs else RooflineCostModel(
-                strategy="space_time"),
-            compile_s=compile_s, autoscaler=autoscaler)
+                 elastic: bool = False) -> FleetMetrics:
+        fleet = FleetSpec(
+            replicas=n,
+            specs=tuple(specs) if specs else None,
+            autoscale=scaler_spec if elastic else None)
+        spec = SystemSpec(mode=base.mode, workload=base.workload, fleet=fleet,
+                          router=RouterSpec(policy=router),
+                          scheduler=base.scheduler, cost_model=base.cost_model)
+        return FleetRun(spec).run_metrics()
 
     print(f"\n{'cell':>24s} {'p95 ms':>9s} {'attain':>7s} {'goodput':>10s} "
           f"{'imbal':>6s} {'util':>6s} {'cold%':>6s} {'repl':>9s}")
@@ -287,8 +297,7 @@ def run_hetero(events: int = 20_000, replicas: int = 4,
     if autoscale:
         for router in ("jsq", "least_cost"):
             show(f"elastic_{router}",
-                 run_cell(router, specs=replica_specs, n=1,
-                          autoscaler=scaler()))
+                 run_cell(router, specs=replica_specs, n=1, elastic=True))
 
     # -------------------------------------------- 1. speed-aware routing
     rr = sections["hetero_round_robin"].summary()["p95_s"]
@@ -325,8 +334,7 @@ def run_hetero(events: int = 20_000, replicas: int = 4,
     # ---------------------------------------------- 4. determinism
     headline = "elastic_least_cost" if autoscale else "hetero_least_cost"
     rerun = run_cell("least_cost", specs=replica_specs,
-                     n=1 if autoscale else replicas,
-                     autoscaler=scaler() if autoscale else None)
+                     n=1 if autoscale else replicas, elastic=autoscale)
     identical = rerun.to_json() == sections[headline].to_json()
     print(f"same-seed rerun of {headline} byte-identical "
           f"(scale events included): {identical}")
@@ -395,6 +403,8 @@ def main() -> None:
                     help="exit non-zero unless routing/scaling/determinism "
                          "contracts hold")
     args = ap.parse_args()
+    print("note: fleet_sweep.py is a shim over the unified CLI; prefer "
+          "`python -m repro sweep` (see README)", file=sys.stderr)
     if args.specs or args.autoscale:
         run_hetero(events=args.events, replicas=args.replicas,
                    specs_arg=args.specs or "v5e,v5e_half",

@@ -1,5 +1,15 @@
 """Policy sweep on the trace-driven simulator (repro.sim).
 
+DEPRECATION SHIM: this script is now a thin caller of the declarative
+``repro.api`` layer — every cell is a ``SystemSpec`` built once and
+``replace()``d per grid point. Prefer the unified CLI for new work:
+
+    PYTHONPATH=src python -m repro sweep --spec examples/specs/paper_mix.json \
+        --axis cost_model.strategy=time_only,space_only,space_time
+
+The argparse surface below is kept for the committed baselines and CI
+gates, which it reproduces byte-identically.
+
 Four sections, all driven by the SAME seeded arrival process through the
 real scheduler on a virtual clock — deterministic per seed, millions of
 events in seconds on CPU:
@@ -27,9 +37,15 @@ from __future__ import annotations
 import argparse
 import sys
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
-from repro.config import ScheduleConfig
+from repro.api import (
+    SchedulerSpec,
+    SystemSpec,
+    WorkloadSpec,
+    build_mix,
+    resolve_rate_hz,
+)
 from repro.sim import (
     STRATEGIES,
     PoissonTrace,
@@ -37,25 +53,9 @@ from repro.sim import (
     SimMetrics,
     Simulator,
     TenantSpec,
-    estimate_capacity_hz,
     interference_matrix,
-    make_trace,
-    paper_sgemm_mix,
-    prefill_decode_mix,
     to_bench_json,
 )
-
-
-def run_sim(trace, schedule: ScheduleConfig, model) -> SimMetrics:
-    return Simulator(schedule=schedule, cost_model=model).run(trace)
-
-
-def build_mix(name: str, tenants: int) -> List[TenantSpec]:
-    if name == "sgemm":
-        return paper_sgemm_mix(tenants)
-    if name == "serving":
-        return prefill_decode_mix(tenants)
-    raise ValueError(f"unknown mix: {name!r}")
 
 
 def run(events: int = 200_000, tenants: int = 8, seed: int = 0,
@@ -63,13 +63,20 @@ def run(events: int = 200_000, tenants: int = 8, seed: int = 0,
         check: bool = False, json_path: Optional[str] = None,
         with_interference: bool = False, csv_rows=None) -> Dict[str, SimMetrics]:
     t_wall = time.perf_counter()
-    mix = build_mix(mix_name, tenants)
+    # the base spec every cell derives from; rho=1.0 makes resolve_rate_hz
+    # report the mix's raw space_time capacity (the sweep's load anchor)
+    base = SystemSpec(
+        workload=WorkloadSpec(mix=mix_name, tenants=tenants, process=process,
+                              events=events, seed=seed, rho=1.0),
+        scheduler=SchedulerSpec(batching_window_s=0.0005,
+                                max_superkernel_size=32),
+    )
+    mix = build_mix(base.workload)
     sections: Dict[str, SimMetrics] = {}
     failures: List[str] = []
 
     # ---------------------------------------------------------- 1. strategies
-    st_model = RooflineCostModel(strategy="space_time")
-    capacity_hz = estimate_capacity_hz(mix, st_model)
+    capacity_hz = resolve_rate_hz(base, mix)
     sat_hz = 2.0 * capacity_hz  # saturate even the fastest strategy
     print(f"\n=== sim_sweep: {events} events/section, mix={mix_name}, "
           f"process={process}, seed={seed} ===")
@@ -78,11 +85,10 @@ def run(events: int = 200_000, tenants: int = 8, seed: int = 0,
     print(f"\n--- strategies (same trace, per-strategy roofline cost) ---")
     print(f"{'strategy':11s} {'tput cost/s':>12s} {'p95 ms':>9s} "
           f"{'attain':>7s} {'util':>6s} {'dispatches':>10s}")
-    sched_cfg = ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32)
     tput: Dict[str, float] = {}
     for strat in STRATEGIES:
-        trace = make_trace(process, mix, sat_hz, events, seed=seed)
-        m = run_sim(trace, sched_cfg, RooflineCostModel(strategy=strat))
+        m = base.replace(**{"workload.rate_hz": sat_hz,
+                            "cost_model.strategy": strat}).build().run_metrics()
         s = m.summary()
         tput[strat] = s["throughput_cost_per_s"]
         sections[f"strategy_{strat}"] = m
@@ -107,12 +113,14 @@ def run(events: int = 200_000, tenants: int = 8, seed: int = 0,
           f"(window {pol_window*1e3:.1f}ms, {pol_events} events) ---")
     attain: Dict[str, float] = {}
     for policy in ("fixed", "slo_adaptive"):
-        trace = make_trace(process, mix, pol_hz, pol_events, seed=seed + 1)
-        m = run_sim(trace,
-                    ScheduleConfig(batching_window_s=pol_window,
-                                   batching_policy=policy,
-                                   max_superkernel_size=64),
-                    st_model)
+        m = base.replace(**{
+            "workload.events": pol_events,
+            "workload.seed": seed + 1,
+            "workload.rate_hz": pol_hz,
+            "scheduler.batching_window_s": pol_window,
+            "scheduler.batching_policy": policy,
+            "scheduler.max_superkernel_size": 64,
+        }).build().run_metrics()
         s = m.summary()
         attain[policy] = s["slo_attainment"]
         sections[f"policy_{policy}"] = m
@@ -135,11 +143,13 @@ def run(events: int = 200_000, tenants: int = 8, seed: int = 0,
           f"{'goodput':>10s} {'dispatches':>10s}")
     for window_s in (0.0005, 0.001, 0.002, 0.004):
         for size in (8, 32, 128):
-            trace = make_trace(process, mix, pol_hz, grid_events, seed=seed + 2)
-            m = run_sim(trace,
-                        ScheduleConfig(batching_window_s=window_s,
-                                       max_superkernel_size=size),
-                        st_model)
+            m = base.replace(**{
+                "workload.events": grid_events,
+                "workload.seed": seed + 2,
+                "workload.rate_hz": pol_hz,
+                "scheduler.batching_window_s": window_s,
+                "scheduler.max_superkernel_size": size,
+            }).build().run_metrics()
             s = m.summary()
             sections[f"grid_w{window_s*1e3:g}ms_s{size}"] = m
             print(f"{window_s*1e3:9.1f} {size:5d} {s['p95_s']*1e3:9.3f} "
@@ -149,7 +159,9 @@ def run(events: int = 200_000, tenants: int = 8, seed: int = 0,
     # -------------------------------------------------------- 4. interference
     if with_interference:
         # one spec per tenant (serving mixes carry prefill+decode streams
-        # per tenant; the matrix is keyed per tenant) — heaviest stream wins
+        # per tenant; the matrix is keyed per tenant) — heaviest stream wins.
+        # Subsets of a mix are below the declarative spec's granularity, so
+        # this section drives the sim primitives directly.
         by_tenant: Dict[int, TenantSpec] = {}
         for s in mix:
             if s.tenant_id < min(4, tenants):
@@ -158,11 +170,13 @@ def run(events: int = 200_000, tenants: int = 8, seed: int = 0,
                     by_tenant[s.tenant_id] = s
         sub = [by_tenant[t] for t in sorted(by_tenant)]
         pair_events = max(events // 50, 500)
+        sched_cfg = base.scheduler.to_schedule_config()
+        st_model = RooflineCostModel(strategy="space_time")
 
         def run_subset(specs):
             trace = PoissonTrace(specs, rate_hz=pol_hz * len(specs) / len(mix),
                                  events=pair_events, seed=seed + 3)
-            return run_sim(trace, sched_cfg, st_model)
+            return Simulator(schedule=sched_cfg, cost_model=st_model).run(trace)
 
         M = interference_matrix(run_subset, sub)
         width = max(len(s.name) for s in sub)
@@ -215,6 +229,8 @@ def main() -> None:
     ap.add_argument("--interference", action="store_true",
                     help="include the pairwise tenant-interference matrix")
     args = ap.parse_args()
+    print("note: sim_sweep.py is a shim over the unified CLI; prefer "
+          "`python -m repro sweep` (see README)", file=sys.stderr)
     run(events=args.events, tenants=args.tenants, seed=args.seed,
         process=args.process, mix_name=args.mix, rho=args.rho,
         check=args.check, json_path=args.json,

@@ -2,8 +2,10 @@
 
 Four replicas of the REAL scheduler (each on its own virtual clock, each
 with its own cold compile cache) serve one bursty Zipf-weighted tenant
-stream under every routing policy. No device work, deterministic per
-seed, seconds on CPU.
+stream under every routing policy — all described by ONE ``SystemSpec``
+with the router swapped per cell, and finished with the committed
+heterogeneous/elastic spec (``examples/specs/hetero_fleet.json``). No
+device work, deterministic per seed, seconds on CPU.
 
 The point this example makes: load balancing and cache affinity pull in
 opposite directions. `jsq` equalizes queues but sprays every tenant's
@@ -14,41 +16,44 @@ compile a cold replica would pay — and typically wins tail latency while
 merging more aggressively (watch its routing imbalance: concentration is
 deliberate, not drift).
 
+Equivalent CLI:
+
+    PYTHONPATH=src python -m repro sweep --spec examples/specs/hetero_fleet.json \
+        --axis router.policy=round_robin,jsq,least_cost,affinity
+
     PYTHONPATH=src python examples/fleet_routing.py
 """
 
-from repro.config import ScheduleConfig
-from repro.sim import (
-    ROUTERS,
-    BacklogAutoscaler,
-    RooflineCostModel,
-    estimate_capacity_hz,
-    fleet_capacity_hz,
-    fleet_sgemm_mix,
-    make_trace,
-    simulate_fleet,
-)
+import os
+
+from repro.api import FleetRun, SchedulerSpec, SystemSpec, WorkloadSpec
+from repro.sim import ROUTERS
 
 EVENTS = 20_000
 REPLICAS = 4
 SEED = 0
 
+HETERO_SPEC = os.path.join(os.path.dirname(__file__), "specs",
+                           "hetero_fleet.json")
+
 
 def main() -> None:
-    mix = fleet_sgemm_mix(12)  # Zipf arrival shares: a few hot tenants
-    base = RooflineCostModel(strategy="space_time")
-    offered_hz = 0.85 * REPLICAS * estimate_capacity_hz(mix, base)
-    sched = ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32)
+    # Zipf arrival shares (mix="fleet"): a few hot tenants dominate
+    base = SystemSpec(
+        workload=WorkloadSpec(mix="fleet", tenants=12, process="mmpp",
+                              events=EVENTS, seed=SEED, rho=0.85),
+        scheduler=SchedulerSpec(batching_window_s=0.0005,
+                                max_superkernel_size=32),
+    )
+    base = base.replace(**{"fleet.replicas": REPLICAS,
+                           "cost_model.compile_us": 200.0})
 
-    print(f"=== {REPLICAS} replicas, bursty MMPP @ ~{offered_hz:,.0f}/s, "
+    print(f"=== {REPLICAS} replicas, bursty MMPP @ rho=0.85, "
           f"{EVENTS} events, compile cold-start 200us ===")
     print(f"{'router':12s} {'p95 ms':>8s} {'attain':>7s} {'goodput':>10s} "
           f"{'imbal':>6s} {'util':>6s} {'cold%':>6s} {'cold 1st->2nd half':>19s}")
     for router in ROUTERS:
-        m = simulate_fleet(
-            make_trace("mmpp", mix, offered_hz, EVENTS, seed=SEED),
-            replicas=REPLICAS, router=router, schedule=sched,
-            cost_model=base, compile_s=200e-6)
+        m = FleetRun(base.replace(**{"router.policy": router})).run_metrics()
         s = m.summary()
         first, second = m.cold_fraction_halves()
         print(f"{router:12s} {s['p95_s']*1e3:8.3f} {s['slo_attainment']:7.3f} "
@@ -62,24 +67,21 @@ def main() -> None:
     print("the price of hot-replica tails. Per-replica detail: "
           "FleetMetrics.per_replica / .routed_counts.")
 
-    # ---- heterogeneous + elastic: mixed generations, autoscaled ----
-    specs = ["v5e", "v5e_half"]  # cycled: fast, half-speed, fast, ...
-    hz = 0.85 * fleet_capacity_hz(mix, [specs[i % 2] for i in range(REPLICAS)])
-    print(f"\n=== mixed v5e + v5e_half fleet, autoscaled from 1 replica ===")
+    # ---- heterogeneous + elastic: the committed spec, as-is and tweaked ----
+    hetero = SystemSpec.load(HETERO_SPEC).replace(**{
+        "workload.events": EVENTS})
+    print(f"\n=== mixed v5e + v5e_half fleet ({HETERO_SPEC}) ===")
     print(f"{'cell':22s} {'p95 ms':>8s} {'goodput':>10s} {'replicas':>9s}")
-    for name, kwargs in (
-        ("hetero round_robin", dict(replicas=REPLICAS, router="round_robin")),
-        ("hetero least_cost", dict(replicas=REPLICAS, router="least_cost")),
-        ("elastic least_cost", dict(
-            replicas=1, router="least_cost",
-            autoscaler=BacklogAutoscaler(
-                max_replicas=REPLICAS, up_backlog_s=0.005,
-                down_backlog_s=0.001, interval_s=50.0 / hz,
-                spinup_s=100e-6))),
+    for name, overrides in (
+        ("hetero round_robin", {"fleet.replicas": REPLICAS,
+                                "fleet.autoscale": None,
+                                "router.policy": "round_robin"}),
+        ("hetero least_cost", {"fleet.replicas": REPLICAS,
+                               "fleet.autoscale": None,
+                               "router.policy": "least_cost"}),
+        ("elastic least_cost", {}),  # the committed spec: grown from 1
     ):
-        m = simulate_fleet(
-            make_trace("mmpp", mix, hz, EVENTS, seed=SEED),
-            schedule=sched, specs=specs, compile_s=200e-6, **kwargs)
+        m = hetero.replace(**overrides).build().run_metrics()
         s = m.summary()
         repl = f"{m.initial_replicas}->{m.final_active}" if m.scale_events \
             else str(m.final_active)

@@ -1,54 +1,67 @@
-"""Quickstart: the paper's mechanism in 60 lines.
+"""Quickstart: the paper's claim through the repo's one front door.
 
-Builds R tenant "models" (same GEMM shape, different weights), runs them
-through the four multiplexing strategies, and shows the dynamic space-time
-scheduler doing shape-bucketed super-kernel dispatch with its compile
-cache warming up.
+Loads the committed ``examples/specs/paper_mix.json`` SystemSpec (the
+paper's Table-1 SGEMM tenant mix under tiered SLOs), runs it under each
+multiplexing strategy, and prints the throughput ordering the paper
+measures — space_time > space_only > time_only. Everything flows through
+``repro.api``: the same spec, ``replace()``d per strategy, picks the
+right executor and returns the same ``RunReport`` shape the fleet and
+live paths produce.
+
+Equivalent CLI:
+
+    PYTHONPATH=src python -m repro simulate --spec examples/specs/paper_mix.json
+    PYTHONPATH=src python -m repro sweep    --spec examples/specs/paper_mix.json \
+        --axis cost_model.strategy=time_only,space_only,space_time
+
+For the live (real-kernel) versions of this demo see
+``examples/spacetime_ablation.py`` and ``examples/multi_tenant_serving.py``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-import jax.numpy as jnp
+import os
 
-from repro.config import ScheduleConfig
-from repro.configs.paper_sgemm import PAPER_GEMM_SHAPES
-from repro.core import DynamicSpaceTimeScheduler, GemmProblem
-from repro.core.strategies import Exclusive, SpaceOnly, SpaceTime, TimeOnly
-from repro.core.superkernel import SuperKernelCache
+from repro.api import SystemSpec
+
+SPEC = os.path.join(os.path.dirname(__file__), "specs", "paper_mix.json")
 
 
 def main() -> None:
-    g = PAPER_GEMM_SHAPES["resnet18_conv2_2"]  # M=256, N=128, K=1152
-    R = 16
-    key = jax.random.PRNGKey(0)
-    problems = []
-    for tenant in range(R):
-        kx, kw, key = jax.random.split(key, 3)
-        problems.append(GemmProblem(
-            tenant_id=tenant,
-            x=jax.random.normal(kx, (g.M, g.K), jnp.float32),
-            w=jax.random.normal(kw, (g.K, g.N), jnp.float32),
-        ))
+    spec = SystemSpec.load(SPEC)
+    w = spec.workload
+    print(f"spec: {SPEC}")
+    print(f"{w.tenants} SGEMM tenants, {w.events} {w.process} arrivals "
+          f"@ rho={w.rho} of space_time capacity, seed={w.seed}\n")
 
-    print(f"{R} tenants, one {g.M}x{g.K}x{g.N} GEMM each "
-          f"({g.flops * R / 1e9:.1f} GFLOP total)\n")
+    print("strategy     tput cost/s    p95 ms   attain     util")
+    tput = {}
+    for strat in ("time_only", "space_only", "space_time"):
+        report = spec.replace(**{"cost_model.strategy": strat}).run()
+        s = report.summary
+        tput[strat] = s["throughput_cost_per_s"]
+        print(f"{strat:12s} {s['throughput_cost_per_s']:11.4g} "
+              f"{s['p95_s']*1e3:9.3f} {s['slo_attainment']:8.3f} "
+              f"{s['utilization']:8.3f}")
 
-    print("strategy      wall ms   GFLOP/s")
-    for strat in (TimeOnly(), SpaceOnly(),
-                  SpaceTime(SuperKernelCache(ScheduleConfig())), Exclusive()):
-        strat.prepare(problems)      # device-resident layout + compile
-        _, t = strat.run()
-        print(f"{strat.name:12s} {t*1e3:8.2f}  {g.flops*R/t/1e9:8.1f}")
+    print(f"\nspace_time / space_only: "
+          f"{tput['space_time'] / tput['space_only']:.2f}x   "
+          f"space_time / time_only: "
+          f"{tput['space_time'] / tput['time_only']:.2f}x   "
+          f"(paper: 3.23x / 7.73x)")
 
-    print("\ndynamic scheduler (stochastic arrivals):")
-    sched = DynamicSpaceTimeScheduler(ScheduleConfig(batching_window_s=0.001))
-    for p in problems:
-        sched.submit(p)
-    done = sched.flush()
-    print(f"  completed {len(done)} kernels in "
-          f"{sched.stats.dispatches} super-kernel dispatches")
-    print(f"  report: { {k: round(v, 4) for k, v in sched.report().items()} }")
+    # the same spec shape scales out: bump the fleet and reroute
+    fleet = spec.replace(**{
+        "fleet.replicas": 4,
+        "router.policy": "least_cost",
+        "cost_model.compile_us": 200.0,
+    })
+    s = fleet.run().summary
+    print(f"\nsame spec, 4 replicas behind least_cost routing: "
+          f"p95 {s['p95_s']*1e3:.3f}ms, attainment {s['slo_attainment']:.3f}, "
+          f"cold-start fraction {s['cold_start_fraction']:.3f}")
+    print("\nnext: python -m repro check --spec examples/specs/hetero_fleet.json")
+    print("      python -m repro simulate --spec examples/specs/hetero_fleet.json")
 
 
 if __name__ == "__main__":

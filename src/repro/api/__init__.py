@@ -1,0 +1,37 @@
+"""repro.api — the declarative front door over every execution path.
+
+One composable, JSON-round-trippable ``SystemSpec`` describes a complete
+experiment; ``build()`` assembles the right executor (solo ``Simulator``,
+``FleetSimulator``, or live ``MultiTenantEngine``) and every executor
+returns the same ``RunReport``. ``python -m repro`` exposes the same
+surface as a CLI (simulate / sweep / calibrate / check / specs); the
+``benchmarks/`` sweeps are thin callers of this package.
+"""
+
+from repro.api.build import (  # noqa: F401
+    FleetRun,
+    LiveRun,
+    SimRun,
+    build_cost_model,
+    build_mix,
+    build_schedule,
+    build_trace,
+    resolve_rate_hz,
+    single_shape_mix,
+)
+from repro.api.report import RunReport  # noqa: F401
+from repro.api.spec import (  # noqa: F401
+    AUTOSCALERS,
+    COST_KINDS,
+    MIXES,
+    MODES,
+    PROCESSES,
+    AutoscaleSpec,
+    CostModelSpec,
+    FleetSpec,
+    RouterSpec,
+    SchedulerSpec,
+    SystemSpec,
+    WorkloadSpec,
+)
+from repro.sim.metrics import SCHEMA_VERSION  # noqa: F401

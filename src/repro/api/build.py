@@ -1,0 +1,283 @@
+"""Spec -> executor assembly: the imperative half of the API.
+
+These builders translate each declarative sub-spec into the subsystem
+object it wraps — trace generators from ``WorkloadSpec``, cost models
+from ``CostModelSpec``, ``ScheduleConfig`` from ``SchedulerSpec`` — and
+the three executors (``SimRun`` / ``FleetRun`` / ``LiveRun``) drive the
+solo simulator, the fleet simulator, and the live multi-tenant engine
+behind one ``run() -> RunReport`` surface.
+
+Construction happens per ``run()`` call, not per executor: cost models
+and routers are stateful (compile caches, EWMA tables, cursors), so each
+run starts from a fresh assembly and the determinism contract (same spec
++ same seed => byte-identical metrics JSON) holds across repeated runs
+of one executor object.
+
+The benchmark sweeps are thin callers of this module: they build a base
+``SystemSpec``, ``replace()`` per grid cell, and call ``run_metrics()``
+for the raw ``SimMetrics``/``FleetMetrics`` their BENCH exports freeze.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Sequence
+
+from repro.api.report import RunReport
+from repro.api.spec import (
+    CostModelSpec,
+    SystemSpec,
+    WorkloadSpec,
+)
+from repro.config import ScheduleConfig
+from repro.launch.roofline import resolve_spec
+from repro.sim.costmodel import (
+    CalibratedCostModel,
+    ColdStartCostModel,
+    RooflineCostModel,
+    estimate_capacity_hz,
+)
+from repro.sim.fleet import FleetSimulator, fleet_capacity_hz
+from repro.sim.simulator import Simulator
+from repro.sim.traces import (
+    CsvReplayTrace,
+    TenantSpec,
+    fleet_sgemm_mix,
+    make_trace,
+    paper_sgemm_mix,
+    prefill_decode_mix,
+)
+
+
+# ------------------------------------------------------------ mix / trace
+def build_mix(workload: WorkloadSpec) -> List[TenantSpec]:
+    """Tenant mix named by ``WorkloadSpec.mix`` (repro.sim.traces)."""
+    if workload.mix == "sgemm":
+        return paper_sgemm_mix(workload.tenants)
+    if workload.mix == "fleet":
+        return fleet_sgemm_mix(workload.tenants, zipf_a=workload.zipf_a)
+    if workload.mix == "serving":
+        return prefill_decode_mix(workload.tenants)
+    if workload.mix == "single":
+        return single_shape_mix(workload.tenants, workload.slo_s)
+    raise ValueError(f"unknown mix {workload.mix!r}")  # unreachable post-init
+
+
+def single_shape_mix(tenants: int, slo_s: float) -> List[TenantSpec]:
+    """All tenants launch the paper's ResNet-18 conv2_2 SGEMM geometry
+    under one SLO — the historical ``dynamic_trace`` setting."""
+    from repro.configs.paper_sgemm import PAPER_GEMM_SHAPES
+    from repro.core.queue import ShapeBucket
+
+    g = PAPER_GEMM_SHAPES["resnet18_conv2_2"]
+    bucket = ShapeBucket("gemm", g.M, g.K, g.N, "float32")
+    return [
+        TenantSpec(
+            tenant_id=t, name=f"t{t}/{g.name}", bucket=bucket,
+            cost=float(g.flops), flops=float(g.flops),
+            bytes=float(4 * (g.M * g.K + g.K * g.N + g.M * g.N)),
+            slo_s=slo_s, kind="kernel",
+        )
+        for t in range(tenants)
+    ]
+
+
+def resolve_rate_hz(spec: SystemSpec, mix: Sequence[TenantSpec]) -> float:
+    """Absolute offered arrivals/s for the spec's workload.
+
+    ``rate_hz`` passes through; ``rho`` is anchored to the configured
+    fleet's aggregate space_time capacity — per-replica rooflines summed
+    for heterogeneous fleets, N x the solo capacity otherwise, with an
+    elastic fleet anchored at its autoscaler's maximum (the capacity it
+    can grow into). That anchoring is what makes one rho mean the same
+    pressure for any mix or fleet shape.
+    """
+    w = spec.workload
+    if w.rate_hz is not None:
+        return w.rate_hz
+    cost = spec.cost_model
+    n = spec.fleet.max_replicas
+    # capacity is priced at one representative merged dispatch round, so
+    # the merge width must be the scheduler's actual cap — anchoring a
+    # wide-merge spec at the default width would understate what the
+    # scheduler can reach
+    merge = (spec.scheduler.max_superkernel_size if spec.scheduler
+             else 32)
+    if spec.fleet.specs is not None:
+        cycled = [spec.fleet.specs[i % len(spec.fleet.specs)] for i in range(n)]
+        return w.rho * fleet_capacity_hz(mix, cycled, merge_size=merge)
+    return w.rho * n * estimate_capacity_hz(
+        mix, RooflineCostModel(
+            spec=resolve_spec(cost.hardware), strategy="space_time",
+            small_kernel_efficiency=cost.small_kernel_efficiency),
+        merge_size=merge)
+
+
+def build_trace(spec: SystemSpec, mix: Sequence[TenantSpec]):
+    """Seeded arrival trace for the spec's workload (re-iterable)."""
+    w = spec.workload
+    if w.process == "replay":
+        return CsvReplayTrace(mix, w.csv_path)
+    return make_trace(w.process, mix, resolve_rate_hz(spec, mix), w.events,
+                      seed=w.seed)
+
+
+# --------------------------------------------------------------- cost model
+def build_cost_model(cost: CostModelSpec) -> Callable[[Sequence], float]:
+    """Base (roofline or calibrated-over-roofline) pricing model.
+
+    Cold-start wrapping (``compile_us``) is the executors' job — compile
+    caches are per-replica state, so the fleet wraps one instance per
+    replica while the solo simulator wraps exactly one.
+    """
+    prior = RooflineCostModel(
+        spec=resolve_spec(cost.hardware), strategy=cost.strategy,
+        small_kernel_efficiency=cost.small_kernel_efficiency)
+    if cost.kind == "roofline":
+        return prior
+    try:
+        return CalibratedCostModel.load(cost.calibration_path, prior=prior)
+    except FileNotFoundError:
+        raise ValueError(
+            f"calibration table not found: {cost.calibration_path!r} "
+            f"(fit one with `python -m repro calibrate --spec ... --out "
+            f"{cost.calibration_path}` or a live dynamic_trace "
+            f"--calibrate run)") from None
+
+
+def build_schedule(spec: SystemSpec) -> Optional[ScheduleConfig]:
+    return spec.scheduler.to_schedule_config() if spec.scheduler else None
+
+
+# ---------------------------------------------------------------- executors
+class SimRun:
+    """Solo executor: one replica of the real scheduler on a virtual
+    clock (``repro.sim.simulator.Simulator``)."""
+
+    executor = "simulator"
+
+    def __init__(self, spec: SystemSpec):
+        self.spec = spec
+
+    def run_metrics(self):
+        """Fresh assembly, one trace, raw ``SimMetrics``."""
+        spec = self.spec
+        mix = build_mix(spec.workload)
+        trace = build_trace(spec, mix)
+        model = build_cost_model(spec.cost_model)
+        sim = Simulator(schedule=build_schedule(spec), cost_model=model)
+        if spec.cost_model.compile_us > 0.0:
+            cold = ColdStartCostModel(
+                model, compile_s=spec.cost_model.compile_us * 1e-6,
+                clock=sim.clock)
+            sim.pump.cost_model = cold
+            sim.scheduler.cost_model = cold
+        return sim.run(trace)
+
+    def run(self) -> RunReport:
+        return RunReport(executor=self.executor, mode=self.spec.mode,
+                         spec=self.spec.to_dict(),
+                         metrics=self.run_metrics().to_dict())
+
+
+class FleetRun:
+    """Fleet executor: N replicas behind a router, optionally
+    heterogeneous and elastic (``repro.sim.fleet.FleetSimulator``)."""
+
+    executor = "fleet"
+
+    def __init__(self, spec: SystemSpec):
+        self.spec = spec
+
+    def run_metrics(self):
+        """Fresh fleet, one trace, raw ``FleetMetrics``."""
+        spec = self.spec
+        fleet, cost = spec.fleet, spec.cost_model
+        mix = build_mix(spec.workload)
+        trace = build_trace(spec, mix)
+        sim = FleetSimulator(
+            replicas=fleet.replicas,
+            router=spec.router.policy,
+            schedule=build_schedule(spec),
+            cost_model=None if fleet.specs else build_cost_model(cost),
+            compile_s=cost.compile_us * 1e-6,
+            specs=list(fleet.specs) if fleet.specs else None,
+            strategy=cost.strategy,
+            autoscaler=fleet.autoscale.build() if fleet.autoscale else None,
+        )
+        return sim.run(trace)
+
+    def run(self) -> RunReport:
+        return RunReport(executor=self.executor, mode=self.spec.mode,
+                         spec=self.spec.to_dict(),
+                         metrics=self.run_metrics().to_dict())
+
+
+class LiveRun:
+    """Live executor: the real jitted ``MultiTenantEngine`` serving
+    actual requests on this host's devices (CPU falls back to the XLA
+    reference kernels). jax imports happen at ``run()`` time so spec
+    validation and sim-only workflows never pay them.
+
+    Wall-clock latencies are real, so live reports are NOT covered by
+    the byte-identical determinism contract — token streams are (seeded
+    sampling), latencies are not.
+    """
+
+    executor = "live"
+
+    def __init__(self, spec: SystemSpec):
+        self.spec = spec
+
+    def run(self) -> RunReport:
+        import dataclasses as _dc
+
+        import jax
+        import numpy as np
+
+        from repro.config import get_config, smoke_variant
+        from repro.models import build_model
+        from repro.serving import EngineConfig, InferenceRequest, MultiTenantEngine
+
+        spec = self.spec
+        w = spec.workload
+        cfg = _dc.replace(smoke_variant(get_config(w.arch)), dtype="float32")
+        model = build_model(cfg)
+        key = jax.random.PRNGKey(w.seed)
+        params = [model.init(jax.random.fold_in(key, t))
+                  for t in range(w.tenants)]
+        # the engine's contrast mode mirrors the cost-model strategy:
+        # time_only gives each tenant its own bucket (sequential
+        # dispatch), everything else rides the merged space-time path
+        engine_mode = ("time_only" if spec.cost_model.strategy == "time_only"
+                       else "space_time")
+        engine = MultiTenantEngine(model, params, EngineConfig(
+            num_tenants=w.tenants,
+            slots_per_tenant=2,
+            cache_len=max(32, w.prompt_tokens + w.max_new_tokens + 8),
+            mode=engine_mode,
+            seed=w.seed,
+            schedule=build_schedule(spec),
+        ))
+        rng = np.random.RandomState(w.seed)
+        for i in range(w.events):
+            engine.submit(InferenceRequest(
+                tenant_id=i % w.tenants,
+                prompt=list(rng.randint(1, cfg.vocab_size,
+                                        size=w.prompt_tokens)),
+                max_new_tokens=w.max_new_tokens,
+            ))
+        t0 = time.perf_counter()
+        engine.run_until_drained()
+        wall_s = time.perf_counter() - t0
+
+        summary = {k: float(v) for k, v in engine.report().items()}
+        summary["wall_s"] = wall_s
+        summary["requests"] = float(len(engine.finished))
+        metrics = {
+            "summary": summary,
+            "arch": w.arch,
+            "engine_mode": engine_mode,
+        }
+        return RunReport(executor=self.executor, mode=spec.mode,
+                         spec=spec.to_dict(), metrics=metrics)

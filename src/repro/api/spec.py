@@ -1,0 +1,461 @@
+"""Declarative system description — the repo's one front door.
+
+A ``SystemSpec`` is a nested, JSON-round-trippable description of a
+complete experiment: what arrives (``WorkloadSpec``), on how many
+replicas of which hardware (``FleetSpec`` + ``AutoscaleSpec``), routed
+how (``RouterSpec``), scheduled how (``SchedulerSpec``), and priced how
+(``CostModelSpec``). ``build()`` assembles the right executor for the
+spec's shape — the solo ``Simulator`` for one replica, the
+``FleetSimulator`` for many, the live ``MultiTenantEngine`` for
+``mode="live"`` — and every executor returns the same ``RunReport``
+(metrics + spec echo + schema_version).
+
+Field-to-subsystem map:
+
+    workload    -> repro.sim.traces   (mix builders + arrival processes)
+    fleet       -> repro.sim.fleet    (replicas, per-replica HardwareSpec
+                                       names, repro.sim.autoscale)
+    router      -> repro.sim.router   (ROUTERS registry)
+    scheduler   -> repro.config.ScheduleConfig (the real scheduling core)
+    cost_model  -> repro.sim.costmodel (roofline / calibrated priors,
+                                        cold-start compile accounting,
+                                        launch.roofline.HARDWARE_SPECS)
+    mode="live" -> repro.serving.MultiTenantEngine (real jitted decode)
+
+Every spec constructor validates eagerly with actionable errors (unknown
+hardware names list the registered ``HARDWARE_SPECS`` keys, unknown
+routers list ``ROUTERS``, ...), so a typo in a JSON spec fails at
+``load`` time, not three layers into a sweep.
+
+Round-trip contract (property-tested): ``SystemSpec.from_dict(s.to_dict())
+== s``, and ``build()`` on the round-tripped spec reproduces
+byte-identical metrics JSON for a fixed seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional, Tuple
+
+from repro.config import ScheduleConfig
+from repro.launch.roofline import resolve_spec
+from repro.sim.costmodel import STRATEGIES
+from repro.sim.metrics import SCHEMA_VERSION
+from repro.sim.router import ROUTERS
+
+MIXES = ("sgemm", "fleet", "serving", "single")
+PROCESSES = ("poisson", "mmpp", "diurnal", "flash", "replay")
+MODES = ("sim", "live")
+COST_KINDS = ("roofline", "calibrated")
+AUTOSCALERS = ("backlog",)
+
+
+def _from_dict(cls, data, where: str):
+    """Construct a spec dataclass from a plain dict, rejecting unknown
+    keys with the list of known fields (the actionable-error contract)."""
+    if not isinstance(data, dict):
+        raise ValueError(f"{where} must be a JSON object, got {type(data).__name__}")
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(data) - known)
+    if unknown:
+        raise ValueError(
+            f"unknown {where} field(s) {unknown} (known: {sorted(known)})")
+    return cls(**data)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """What arrives: a named tenant mix driven by an arrival process.
+
+    Offered load is either absolute (``rate_hz``) or capacity-anchored
+    (``rho``: the fraction of the configured fleet's estimated space_time
+    capacity — one number that means the same pressure for any mix or
+    fleet shape). Exactly one of the two applies; ``rho`` wins when both
+    are unset via its default.
+
+    The live-mode fields (``arch``, ``prompt_tokens``, ``max_new_tokens``)
+    only matter under ``SystemSpec(mode="live")``, where ``events`` is the
+    total request count spread round-robin over ``tenants``.
+    """
+
+    mix: str = "sgemm"             # sgemm | fleet (Zipf) | serving | single
+    tenants: int = 8
+    process: str = "poisson"       # poisson | mmpp | diurnal | flash | replay
+    events: int = 20_000
+    seed: int = 0
+    rho: Optional[float] = 0.7     # offered load / estimated capacity
+    rate_hz: Optional[float] = None  # absolute arrivals/s (overrides rho)
+    zipf_a: float = 1.1            # mix="fleet": Zipf skew of tenant weights
+    slo_s: float = 0.010           # mix="single": the one SLO tier
+    csv_path: Optional[str] = None  # process="replay": recorded t_s,tenant rows
+    arch: str = "stablelm-1.6b"    # mode="live": model architecture
+    prompt_tokens: int = 8         # mode="live": prompt length per request
+    max_new_tokens: int = 8        # mode="live": decode budget per request
+
+    def __post_init__(self) -> None:
+        if self.mix not in MIXES:
+            raise ValueError(f"unknown mix {self.mix!r} (have {MIXES})")
+        if self.process not in PROCESSES:
+            raise ValueError(
+                f"unknown arrival process {self.process!r} (have {PROCESSES})")
+        if self.tenants < 1:
+            raise ValueError(f"tenants must be >= 1, got {self.tenants}")
+        if self.events < 0:
+            raise ValueError(f"events must be >= 0, got {self.events}")
+        if self.process == "replay" and not self.csv_path:
+            raise ValueError('process="replay" needs csv_path (rows of "t_s,tenant")')
+        if self.process != "replay":
+            if self.rate_hz is not None:
+                if self.rate_hz <= 0:
+                    raise ValueError(f"rate_hz must be > 0, got {self.rate_hz}")
+            elif self.rho is None:
+                raise ValueError("set rho (capacity fraction) or rate_hz (absolute)")
+            elif self.rho <= 0:
+                raise ValueError(f"rho must be > 0, got {self.rho}")
+        if self.zipf_a < 0:
+            raise ValueError(f"zipf_a must be >= 0, got {self.zipf_a}")
+        if self.slo_s <= 0:
+            raise ValueError(f"slo_s must be > 0, got {self.slo_s}")
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "WorkloadSpec":
+        return _from_dict(cls, data, "workload")
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscaleSpec:
+    """Elastic-fleet policy (repro.sim.autoscale) in declarative form."""
+
+    policy: str = "backlog"
+    min_replicas: int = 1
+    max_replicas: int = 8
+    up_backlog_s: float = 0.010
+    down_backlog_s: float = 0.002
+    interval_s: float = 0.1
+    cooldown_ticks: int = 2
+    spinup_s: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.policy not in AUTOSCALERS:
+            raise ValueError(
+                f"unknown autoscaler {self.policy!r} (have {AUTOSCALERS})")
+        # range/ordering constraints are owned by the controller itself —
+        # construct one so spec validation and runtime agree exactly
+        self.build()
+
+    def build(self):
+        from repro.sim.autoscale import make_autoscaler
+
+        kwargs = dataclasses.asdict(self)
+        kwargs.pop("policy")
+        return make_autoscaler(self.policy, **kwargs)
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "AutoscaleSpec":
+        return _from_dict(cls, data, "fleet.autoscale")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """How many replicas, of what hardware, grown how.
+
+    ``replicas`` is the fleet size at trace start; ``specs`` (names from
+    ``launch.roofline.HARDWARE_SPECS``, cycled over replica ids) makes
+    the fleet heterogeneous; ``autoscale`` makes it elastic between the
+    policy's min/max. One replica with no specs/autoscale builds the solo
+    ``Simulator``; anything else builds the ``FleetSimulator``.
+    """
+
+    replicas: int = 1
+    specs: Optional[Tuple[str, ...]] = None
+    autoscale: Optional[AutoscaleSpec] = None
+
+    def __post_init__(self) -> None:
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {self.replicas}")
+        if self.specs is not None:
+            if not self.specs:
+                raise ValueError("fleet.specs must be non-empty when given")
+            object.__setattr__(self, "specs", tuple(self.specs))
+            for name in self.specs:
+                if not isinstance(name, str):
+                    raise ValueError(
+                        "fleet.specs entries must be HARDWARE_SPECS names "
+                        f"(JSON-portable), got {name!r}")
+                resolve_spec(name)  # raises the names-listing ValueError
+
+    @property
+    def is_fleet(self) -> bool:
+        return (self.replicas > 1 or self.specs is not None
+                or self.autoscale is not None)
+
+    @property
+    def max_replicas(self) -> int:
+        """Largest replica count this spec can reach (capacity anchor)."""
+        if self.autoscale is not None:
+            return max(self.replicas, self.autoscale.max_replicas)
+        return self.replicas
+
+    def to_dict(self) -> Dict:
+        return {
+            "replicas": self.replicas,
+            "specs": list(self.specs) if self.specs is not None else None,
+            "autoscale": self.autoscale.to_dict() if self.autoscale else None,
+        }
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "FleetSpec":
+        data = dict(data) if isinstance(data, dict) else data
+        if isinstance(data, dict) and isinstance(data.get("autoscale"), dict):
+            data["autoscale"] = AutoscaleSpec.from_dict(data["autoscale"])
+        if isinstance(data, dict) and data.get("specs") is not None:
+            data["specs"] = tuple(data["specs"])
+        return _from_dict(cls, data, "fleet")
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterSpec:
+    """Which replica each arrival goes to (repro.sim.router registry)."""
+
+    policy: str = "jsq"
+
+    def __post_init__(self) -> None:
+        if self.policy not in ROUTERS:
+            raise ValueError(f"unknown router {self.policy!r} (have {ROUTERS})")
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "RouterSpec":
+        return _from_dict(cls, data, "router")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerSpec:
+    """The real scheduling core's knobs — mirrors ``ScheduleConfig``
+    field-for-field, so a spec file documents exactly what the scheduler
+    will run with and validation is ScheduleConfig's own."""
+
+    batching_window_s: float = 0.002
+    batching_policy: str = "fixed"
+    min_batching_window_s: float = 0.0
+    slo_slack_fraction: float = 0.25
+    max_pending_per_tenant: Optional[int] = None
+    max_superkernel_size: int = 128
+    r_bucketing: str = "pow2"
+    straggler_eviction_ratio: float = 1.5
+    latency_ewma_alpha: float = 0.2
+    default_slo_s: float = 0.100
+    allow_ragged_merge: bool = False
+
+    def __post_init__(self) -> None:
+        self.to_schedule_config()  # ScheduleConfig owns the validation
+
+    def to_schedule_config(self) -> ScheduleConfig:
+        return ScheduleConfig(**dataclasses.asdict(self))
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "SchedulerSpec":
+        return _from_dict(cls, data, "scheduler")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModelSpec:
+    """How a super-dispatch is priced (repro.sim.costmodel).
+
+    ``kind="roofline"`` is the analytical prior over the named hardware;
+    ``kind="calibrated"`` loads a fitted ``CalibratedCostModel`` table
+    (``calibration_path``, produced by ``python -m repro calibrate`` or a
+    live ``dynamic_trace --calibrate`` run) over that prior.
+    ``compile_us > 0`` wraps the model in per-replica compile-cache
+    cold-start accounting (``ColdStartCostModel``). On heterogeneous
+    fleets (``fleet.specs``) each replica prices through its OWN
+    hardware's roofline; ``hardware`` then only anchors capacity.
+    """
+
+    kind: str = "roofline"
+    hardware: str = "v5e"
+    strategy: str = "space_time"
+    small_kernel_efficiency: float = 0.45
+    compile_us: float = 0.0
+    calibration_path: Optional[str] = None
+    ewma_alpha: float = 0.2
+
+    def __post_init__(self) -> None:
+        if self.kind not in COST_KINDS:
+            raise ValueError(f"unknown cost model kind {self.kind!r} "
+                             f"(have {COST_KINDS})")
+        resolve_spec(self.hardware)  # raises the names-listing ValueError
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r} (have {STRATEGIES})")
+        if not (0.0 < self.small_kernel_efficiency <= 1.0):
+            raise ValueError("small_kernel_efficiency must be in (0, 1], got "
+                             f"{self.small_kernel_efficiency}")
+        if self.compile_us < 0.0:
+            raise ValueError(f"compile_us must be >= 0, got {self.compile_us}")
+        if self.kind == "calibrated" and not self.calibration_path:
+            raise ValueError(
+                'kind="calibrated" needs calibration_path (a table saved by '
+                "CalibratedCostModel.save / `python -m repro calibrate`)")
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "CostModelSpec":
+        return _from_dict(cls, data, "cost_model")
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    """The complete declarative experiment (see module docstring)."""
+
+    mode: str = "sim"
+    workload: WorkloadSpec = dataclasses.field(default_factory=WorkloadSpec)
+    fleet: FleetSpec = dataclasses.field(default_factory=FleetSpec)
+    router: RouterSpec = dataclasses.field(default_factory=RouterSpec)
+    # None = each executor's own defaults (ScheduleConfig() for sims, the
+    # engine-derived greedy schedule for live runs)
+    scheduler: Optional[SchedulerSpec] = None
+    cost_model: CostModelSpec = dataclasses.field(default_factory=CostModelSpec)
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r} (have {MODES})")
+        if self.mode == "live" and self.fleet.is_fleet:
+            raise ValueError(
+                "mode='live' drives ONE MultiTenantEngine; multi-replica / "
+                "heterogeneous / autoscaled fleets are sim-only for now "
+                "(set fleet to a single plain replica)")
+        if self.fleet.specs is not None and self.cost_model.kind == "calibrated":
+            raise ValueError(
+                "cost_model.kind='calibrated' cannot combine with "
+                "fleet.specs: heterogeneous replicas price through their "
+                "own per-hardware rooflines, and per-replica calibrated "
+                "tables (FleetCalibrator) are not spec-addressable yet "
+                "(see ROADMAP); drop fleet.specs or use kind='roofline'")
+
+    # ----------------------------------------------------------- round trip
+    def to_dict(self) -> Dict:
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "mode": self.mode,
+            "workload": self.workload.to_dict(),
+            "fleet": self.fleet.to_dict(),
+            "router": self.router.to_dict(),
+            "scheduler": self.scheduler.to_dict() if self.scheduler else None,
+            "cost_model": self.cost_model.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "SystemSpec":
+        if not isinstance(data, dict):
+            raise ValueError(f"spec must be a JSON object, got {type(data).__name__}")
+        data = dict(data)
+        version = data.pop("schema_version", SCHEMA_VERSION)
+        if not isinstance(version, int):
+            raise ValueError(
+                f"schema_version must be an integer, got {version!r}")
+        if version > SCHEMA_VERSION:
+            raise ValueError(
+                f"spec schema_version {version} is newer than this build "
+                f"supports ({SCHEMA_VERSION}); update the repo or re-save "
+                f"the spec")
+        converters = {
+            "workload": WorkloadSpec.from_dict,
+            "fleet": FleetSpec.from_dict,
+            "router": RouterSpec.from_dict,
+            "scheduler": SchedulerSpec.from_dict,
+            "cost_model": CostModelSpec.from_dict,
+        }
+        for key, conv in converters.items():
+            if isinstance(data.get(key), dict):
+                data[key] = conv(data[key])
+        if data.get("scheduler") is None:
+            data.pop("scheduler", None)
+        return _from_dict(cls, data, "spec")
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    def save(self, path: str) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            fh.write(self.to_json() + "\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def from_json(cls, text: str) -> "SystemSpec":
+        return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def load(cls, path: str) -> "SystemSpec":
+        try:
+            with open(path) as fh:
+                return cls.from_json(fh.read())
+        except FileNotFoundError:
+            raise ValueError(
+                f"spec file not found: {path!r} (committed examples live "
+                f"under examples/specs/)") from None
+
+    # -------------------------------------------------------------- override
+    def replace(self, **dotted) -> "SystemSpec":
+        """Functional override by dotted path — the CLI's ``--set``/axis
+        surface: ``spec.replace(**{"workload.events": 2000,
+        "router.policy": "jsq"})`` re-validates through from_dict."""
+        doc = self.to_dict()
+        for path, value in dotted.items():
+            node = doc
+            *parents, leaf = path.split(".")
+            for part in parents:
+                child = node.get(part) if isinstance(node, dict) else None
+                if not isinstance(child, dict):
+                    # materialize defaults for absent optional sub-specs
+                    # (e.g. scheduler: null) so leaves under them resolve
+                    defaults = {
+                        "scheduler": SchedulerSpec,
+                        "autoscale": AutoscaleSpec,
+                    }.get(part)
+                    if not isinstance(node, dict) or defaults is None:
+                        raise ValueError(
+                            f"cannot set {path!r}: {part!r} is not a spec "
+                            f"section")
+                    child = defaults().to_dict()
+                    node[part] = child
+                node = child
+            if leaf not in node:
+                raise ValueError(
+                    f"cannot set {path!r}: unknown field {leaf!r} "
+                    f"(known: {sorted(node)})")
+            node[leaf] = value
+        return SystemSpec.from_dict(doc)
+
+    # ----------------------------------------------------------------- build
+    def build(self):
+        """Assemble the executor this spec's shape calls for: solo
+        ``Simulator`` / ``FleetSimulator`` / live ``MultiTenantEngine``
+        behind a uniform ``run() -> RunReport`` surface."""
+        from repro.api.build import FleetRun, LiveRun, SimRun
+
+        if self.mode == "live":
+            return LiveRun(self)
+        if self.fleet.is_fleet:
+            return FleetRun(self)
+        return SimRun(self)
+
+    def run(self):
+        """One-shot convenience: ``build()`` then ``run()``."""
+        return self.build().run()

@@ -79,6 +79,35 @@ class HardwareSpec:
 
 TPU_V5E = HardwareSpec()
 
+# Named chips for CLI/spec surfaces (``fleet_sweep --specs ...``,
+# ``repro.api`` hardware names): the current generation plus derated
+# older generations of the same architecture — launch overheads
+# identical, roofs scaled (see ``HardwareSpec.scaled``). Lives beside
+# ``HardwareSpec`` so every layer (roofline report, sim cost models,
+# declarative SystemSpec) resolves names against ONE registry.
+HARDWARE_SPECS: Dict[str, HardwareSpec] = {
+    "v5e": TPU_V5E,
+    "v5e_half": TPU_V5E.scaled(0.5, name="v5e_half"),
+    "v5e_quarter": TPU_V5E.scaled(0.25, name="v5e_quarter"),
+}
+
+
+def resolve_spec(spec) -> HardwareSpec:
+    """Accept a ``HardwareSpec`` or a ``HARDWARE_SPECS`` name.
+
+    Unknown names raise a ``ValueError`` that lists the registered keys —
+    the same actionable message ``repro.api`` spec validation surfaces.
+    """
+    if isinstance(spec, HardwareSpec):
+        return spec
+    try:
+        return HARDWARE_SPECS[spec]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown hardware spec {spec!r} "
+            f"(names: {sorted(HARDWARE_SPECS)})") from None
+
+
 # Backwards-compatible module constants (pre-HardwareSpec callers).
 PEAK_FLOPS = TPU_V5E.peak_flops
 HBM_BW = TPU_V5E.hbm_bw

@@ -37,6 +37,7 @@ from repro.sim.fleet import (  # noqa: F401
     simulate_fleet,
 )
 from repro.sim.metrics import (  # noqa: F401
+    SCHEMA_VERSION,
     FleetMetrics,
     MetricsAccumulator,
     SimMetrics,

@@ -56,32 +56,15 @@ from array import array
 from typing import Callable, Dict, Optional, Sequence
 
 from repro.core.workload import round_pow2
-from repro.launch.roofline import TPU_V5E, HardwareSpec
+from repro.launch.roofline import (  # noqa: F401  (re-exported: the
+    HARDWARE_SPECS,  # registry lives beside HardwareSpec in launch/roofline;
+    TPU_V5E,  # sim callers keep importing it from here)
+    HardwareSpec,
+    resolve_spec,
+)
 
 # canonical strategy names, worst-to-best throughput (display order too)
 STRATEGIES = ("time_only", "space_only", "space_time", "exclusive")
-
-# named chips for heterogeneous-fleet CLIs (``fleet_sweep --specs ...``):
-# the current generation plus derated older generations of the same
-# architecture — launch overheads identical, roofs scaled (see
-# ``HardwareSpec.scaled``)
-HARDWARE_SPECS: Dict[str, HardwareSpec] = {
-    "v5e": TPU_V5E,
-    "v5e_half": TPU_V5E.scaled(0.5, name="v5e_half"),
-    "v5e_quarter": TPU_V5E.scaled(0.25, name="v5e_quarter"),
-}
-
-
-def resolve_spec(spec) -> HardwareSpec:
-    """Accept a ``HardwareSpec`` or a ``HARDWARE_SPECS`` name."""
-    if isinstance(spec, HardwareSpec):
-        return spec
-    try:
-        return HARDWARE_SPECS[spec]
-    except (KeyError, TypeError):
-        raise ValueError(
-            f"unknown hardware spec {spec!r} "
-            f"(names: {sorted(HARDWARE_SPECS)})") from None
 
 
 def _flops(w) -> float:

@@ -73,6 +73,7 @@ def fleet_capacity_hz(
     mix: Sequence,
     specs: Sequence[Union[str, HardwareSpec]],
     strategy: str = "space_time",
+    merge_size: int = 32,
 ) -> float:
     """Aggregate sustainable arrivals/s of a heterogeneous fleet: the sum
     of each replica's ``estimate_capacity_hz`` under its own spec — the
@@ -80,7 +81,8 @@ def fleet_capacity_hz(
     homogeneous twin see the same offered load."""
     return sum(
         estimate_capacity_hz(
-            mix, RooflineCostModel(spec=resolve_spec(s), strategy=strategy))
+            mix, RooflineCostModel(spec=resolve_spec(s), strategy=strategy),
+            merge_size=merge_size)
         for s in specs)
 
 

@@ -23,6 +23,13 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+# Version stamp of every exported metrics document (SimMetrics /
+# FleetMetrics to_dict + to_bench_json) and of RunReport (repro.api).
+# Bump when the JSON layout changes shape — the regression gate
+# (benchmarks/check_regression.py) reports a version mismatch instead of
+# silently comparing rows across incompatible layouts.
+SCHEMA_VERSION = 1
+
 
 class MetricsAccumulator:
     """Columnar per-completion record store (hot-loop ingestion side)."""
@@ -181,6 +188,7 @@ class SimMetrics:
 
     def to_dict(self) -> Dict:
         return {
+            "schema_version": SCHEMA_VERSION,
             "summary": self.summary(),
             "per_tenant": {str(k): v for k, v in self.per_tenant().items()},
             "per_kind": self.per_kind(),
@@ -389,6 +397,7 @@ def to_bench_json(name: str, sections: Dict[str, "SimMetrics | FleetMetrics"],
         )
     doc = {
         "benchmark": name,
+        "schema_version": SCHEMA_VERSION,
         "rows": rows,
         "sections": {k: m.to_dict() for k, m in sorted(sections.items())},
     }

@@ -1,0 +1,474 @@
+"""The declarative front door (repro.api): SystemSpec round-trips,
+validation errors, executor selection, the RunReport contract, and the
+unified CLI.
+
+The hypothesis round-trip property lives at the bottom behind the usual
+importorskip guard; plain parametrized versions of the same properties
+run everywhere.
+"""
+
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.api import (
+    AutoscaleSpec,
+    CostModelSpec,
+    FleetRun,
+    FleetSpec,
+    LiveRun,
+    RouterSpec,
+    RunReport,
+    SCHEMA_VERSION,
+    SchedulerSpec,
+    SimRun,
+    SystemSpec,
+    WorkloadSpec,
+    build_mix,
+    resolve_rate_hz,
+)
+from repro.api.cli import main as cli_main
+from repro.launch.roofline import HARDWARE_SPECS, TPU_V5E, resolve_spec
+from repro.sim import SimMetrics, simulate
+
+
+def tiny_spec(**workload_overrides) -> SystemSpec:
+    wl = dict(mix="sgemm", tenants=4, events=1500, seed=0, rho=0.7)
+    wl.update(workload_overrides)
+    return SystemSpec(
+        workload=WorkloadSpec(**wl),
+        scheduler=SchedulerSpec(batching_window_s=0.0005,
+                                max_superkernel_size=32),
+    )
+
+
+def hetero_spec() -> SystemSpec:
+    return SystemSpec(
+        workload=WorkloadSpec(mix="fleet", tenants=6, process="mmpp",
+                              events=1500, seed=3, rho=0.85),
+        fleet=FleetSpec(replicas=2, specs=("v5e", "v5e_half"),
+                        autoscale=AutoscaleSpec(
+                            max_replicas=4, up_backlog_s=0.005,
+                            down_backlog_s=0.001, interval_s=0.002,
+                            spinup_s=1e-4)),
+        router=RouterSpec(policy="least_cost"),
+        scheduler=SchedulerSpec(batching_window_s=0.0005,
+                                max_superkernel_size=32),
+        cost_model=CostModelSpec(compile_us=200.0),
+    )
+
+
+# ------------------------------------------------------------- round trips
+class TestSpecRoundTrip:
+    @pytest.mark.parametrize("spec", [
+        SystemSpec(),
+        tiny_spec(),
+        hetero_spec(),
+        SystemSpec(mode="live",
+                   workload=WorkloadSpec(tenants=2, events=4)),
+    ], ids=["defaults", "solo", "hetero_elastic", "live"])
+    def test_from_dict_to_dict_idempotent(self, spec):
+        d = spec.to_dict()
+        again = SystemSpec.from_dict(d)
+        assert again == spec
+        assert again.to_dict() == d
+        # and through an actual JSON string (what save/load do)
+        assert SystemSpec.from_json(spec.to_json()) == spec
+
+    def test_to_dict_is_json_serializable_and_versioned(self):
+        d = hetero_spec().to_dict()
+        doc = json.loads(json.dumps(d))
+        assert doc["schema_version"] == SCHEMA_VERSION
+        assert doc["fleet"]["specs"] == ["v5e", "v5e_half"]
+
+    def test_save_load(self, tmp_path):
+        path = str(tmp_path / "spec.json")
+        spec = hetero_spec()
+        spec.save(path)
+        assert SystemSpec.load(path) == spec
+
+    def test_partial_dict_fills_defaults(self):
+        spec = SystemSpec.from_dict(
+            {"workload": {"events": 123}, "router": {"policy": "affinity"}})
+        assert spec.workload.events == 123
+        assert spec.workload.mix == "sgemm"
+        assert spec.router.policy == "affinity"
+        assert spec.scheduler is None
+
+    def test_newer_schema_version_rejected(self):
+        with pytest.raises(ValueError, match="schema_version"):
+            SystemSpec.from_dict({"schema_version": SCHEMA_VERSION + 1})
+
+    def test_roundtrip_build_reproduces_metrics_bytes(self):
+        spec = tiny_spec()
+        a = spec.build().run_metrics().to_json()
+        b = SystemSpec.from_dict(spec.to_dict()).build().run_metrics().to_json()
+        assert a == b
+
+    def test_roundtrip_build_reproduces_fleet_bytes(self):
+        spec = hetero_spec()
+        a = FleetRun(spec).run_metrics().to_json()
+        b = FleetRun(SystemSpec.from_json(spec.to_json())).run_metrics().to_json()
+        assert a == b
+
+    def test_run_report_roundtrip(self, tmp_path):
+        report = tiny_spec().run()
+        path = str(tmp_path / "report.json")
+        report.save(path)
+        again = RunReport.load(path)
+        assert again == report
+        assert again.schema_version == SCHEMA_VERSION
+        assert again.spec == tiny_spec().to_dict()
+
+
+# -------------------------------------------------------------- validation
+class TestValidation:
+    def test_unknown_hardware_lists_registered_names(self):
+        # the SAME actionable message everywhere: the registry's own
+        # resolve_spec error is what spec validation surfaces
+        for raiser in (
+            lambda: resolve_spec("tpu_v9000"),
+            lambda: CostModelSpec(hardware="tpu_v9000"),
+            lambda: FleetSpec(replicas=2, specs=("v5e", "tpu_v9000")),
+        ):
+            with pytest.raises(ValueError) as e:
+                raiser()
+            for name in HARDWARE_SPECS:
+                assert name in str(e.value)
+
+    def test_resolve_spec_passthrough_and_alias(self):
+        assert resolve_spec(TPU_V5E) is TPU_V5E
+        from repro.sim import resolve_spec as sim_resolve
+        assert sim_resolve is resolve_spec
+
+    @pytest.mark.parametrize("bad,match", [
+        (lambda: WorkloadSpec(mix="nope"), "unknown mix"),
+        (lambda: WorkloadSpec(process="nope"), "unknown arrival process"),
+        (lambda: WorkloadSpec(rho=None, rate_hz=None), "rho"),
+        (lambda: WorkloadSpec(rho=-1.0), "rho"),
+        (lambda: WorkloadSpec(process="replay"), "csv_path"),
+        (lambda: WorkloadSpec(tenants=0), "tenants"),
+        (lambda: RouterSpec(policy="nope"), "unknown router"),
+        (lambda: CostModelSpec(kind="nope"), "unknown cost model kind"),
+        (lambda: CostModelSpec(strategy="nope"), "unknown strategy"),
+        (lambda: CostModelSpec(kind="calibrated"), "calibration_path"),
+        (lambda: CostModelSpec(compile_us=-1.0), "compile_us"),
+        (lambda: FleetSpec(replicas=0), "replicas"),
+        (lambda: FleetSpec(replicas=2, specs=()), "non-empty"),
+        (lambda: AutoscaleSpec(policy="nope"), "unknown autoscaler"),
+        (lambda: AutoscaleSpec(min_replicas=5, max_replicas=2), "min_replicas"),
+        (lambda: SchedulerSpec(batching_window_s=-1.0), "batching_window_s"),
+        (lambda: SystemSpec(mode="nope"), "unknown mode"),
+    ])
+    def test_actionable_errors(self, bad, match):
+        with pytest.raises(ValueError, match=match):
+            bad()
+
+    def test_unknown_field_rejected_with_known_list(self):
+        with pytest.raises(ValueError, match="known"):
+            SystemSpec.from_dict({"workload": {"evnts": 10}})
+        with pytest.raises(ValueError, match="known"):
+            SystemSpec.from_dict({"wrkload": {}})
+
+    def test_live_fleet_rejected(self):
+        with pytest.raises(ValueError, match="live"):
+            SystemSpec(mode="live", fleet=FleetSpec(replicas=2))
+
+    def test_calibrated_over_hetero_specs_rejected(self):
+        # heterogeneous replicas price through per-hardware rooflines; a
+        # fleet-wide calibrated table would be silently dropped, so the
+        # combination must fail loudly at validation time
+        with pytest.raises(ValueError, match="FleetCalibrator"):
+            SystemSpec(
+                fleet=FleetSpec(replicas=2, specs=("v5e", "v5e_half")),
+                cost_model=CostModelSpec(kind="calibrated",
+                                         calibration_path="x.json"))
+
+    def test_non_integer_schema_version_rejected(self):
+        with pytest.raises(ValueError, match="integer"):
+            SystemSpec.from_dict({"schema_version": "2"})
+
+    def test_missing_spec_file_actionable(self):
+        with pytest.raises(ValueError, match="examples/specs"):
+            SystemSpec.load("/nonexistent/spec.json")
+
+    def test_missing_calibration_table_actionable(self):
+        spec = tiny_spec()
+        spec = spec.replace(**{
+            "cost_model.kind": "calibrated",
+            "cost_model.calibration_path": "/nonexistent/costs.json"})
+        with pytest.raises(ValueError, match="calibrate"):
+            spec.build().run_metrics()
+
+    def test_replace_unknown_path_rejected(self):
+        with pytest.raises(ValueError, match="unknown field"):
+            tiny_spec().replace(**{"workload.evnts": 10})
+        with pytest.raises(ValueError, match="not a spec section"):
+            tiny_spec().replace(**{"workload.events.deep": 10})
+
+
+# -------------------------------------------------------- executor choice
+class TestBuild:
+    def test_solo_executor(self):
+        assert isinstance(tiny_spec().build(), SimRun)
+
+    def test_replicas_pick_fleet(self):
+        assert isinstance(
+            tiny_spec().replace(**{"fleet.replicas": 2}).build(), FleetRun)
+
+    def test_specs_pick_fleet_even_solo(self):
+        spec = tiny_spec().replace(**{"fleet.specs": ["v5e_half"]})
+        assert isinstance(spec.build(), FleetRun)
+
+    def test_autoscale_picks_fleet(self):
+        spec = SystemSpec(
+            workload=tiny_spec().workload,
+            fleet=FleetSpec(replicas=1, autoscale=AutoscaleSpec()))
+        assert isinstance(spec.build(), FleetRun)
+
+    def test_live_mode_picks_live_without_importing_jax(self):
+        run = SystemSpec(mode="live").build()
+        assert isinstance(run, LiveRun)  # jax only imported inside run()
+
+    def test_reports_share_shape_across_executors(self):
+        solo = tiny_spec().run()
+        fleet = FleetRun(hetero_spec()).run()
+        for report, executor in ((solo, "simulator"), (fleet, "fleet")):
+            assert report.executor == executor
+            assert report.schema_version == SCHEMA_VERSION
+            assert report.spec["schema_version"] == SCHEMA_VERSION
+            assert "p95_s" in report.summary
+            assert report.metrics["schema_version"] == SCHEMA_VERSION
+            # the echo rebuilds the producing spec
+            assert SystemSpec.from_dict(report.spec).build() is not None
+
+    def test_solo_cold_start_wrap(self):
+        cold = tiny_spec().replace(**{"cost_model.compile_us": 500.0})
+        m_cold = cold.build().run_metrics()
+        m_warm = tiny_spec().build().run_metrics()
+        # compiles push the makespan out for the same trace
+        assert m_cold.sim_duration_s > m_warm.sim_duration_s
+
+    def test_rate_hz_overrides_rho(self):
+        spec = tiny_spec(rate_hz=1234.5)
+        assert resolve_rate_hz(spec, build_mix(spec.workload)) == 1234.5
+
+    def test_rho_anchors_scale_with_fleet(self):
+        mix = build_mix(tiny_spec().workload)
+        solo = resolve_rate_hz(tiny_spec(), mix)
+        four = resolve_rate_hz(
+            tiny_spec().replace(**{"fleet.replicas": 4}), mix)
+        assert four == pytest.approx(4 * solo)
+
+    def test_single_mix_matches_legacy_dynamic_trace(self):
+        """The spec-built 'single' mix replay must equal the historical
+        hand-wired dynamic_trace simulation path."""
+        from repro.api import single_shape_mix
+        from repro.config import ScheduleConfig
+        from repro.sim import PoissonTrace, RooflineCostModel
+
+        spec = SystemSpec(
+            workload=WorkloadSpec(mix="single", tenants=5, events=600,
+                                  seed=7, rate_hz=15000.0, slo_s=0.01),
+            scheduler=SchedulerSpec(batching_window_s=0.0005,
+                                    max_superkernel_size=32),
+        )
+        via_api = spec.build().run_metrics()
+        legacy = simulate(
+            PoissonTrace(single_shape_mix(5, 0.01), 15000.0, 600, seed=7),
+            ScheduleConfig(batching_window_s=0.0005, max_superkernel_size=32),
+            RooflineCostModel())
+        assert via_api.to_json() == legacy.to_json()
+
+
+# ------------------------------------------------------------ schema stamp
+class TestSchemaVersion:
+    def test_sim_metrics_json_versioned(self):
+        m = tiny_spec().build().run_metrics()
+        assert isinstance(m, SimMetrics)
+        assert json.loads(m.to_json())["schema_version"] == SCHEMA_VERSION
+
+    def test_bench_json_versioned(self):
+        from repro.sim import to_bench_json
+
+        doc = json.loads(to_bench_json(
+            "t", {"cell": tiny_spec().build().run_metrics()}))
+        assert doc["schema_version"] == SCHEMA_VERSION
+
+    def test_check_regression_ignores_schema_version(self):
+        from benchmarks.check_regression import _direction, compare
+
+        rows = {"x/p95": 10.0, "x/goodput": 5.0}
+        problems, gated = compare(rows, dict(rows), tolerance=0.10)
+        assert problems == [] and gated == 2
+        assert _direction("x/schema_version") == 0  # never gated
+
+
+# --------------------------------------------------------------------- CLI
+class TestCli:
+    SPEC_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                            "examples", "specs")
+
+    def test_specs_lists_registries(self, capsys):
+        assert cli_main(["specs"]) == 0
+        out = capsys.readouterr().out
+        for name in HARDWARE_SPECS:
+            assert name in out
+        for router in ("round_robin", "jsq", "least_cost", "affinity"):
+            assert router in out
+
+    def test_specs_json(self, capsys):
+        assert cli_main(["specs", "--json"]) == 0
+        doc = json.loads(capsys.readouterr().out)
+        assert doc["schema_version"] == SCHEMA_VERSION
+        assert set(HARDWARE_SPECS) <= set(doc["hardware"])
+
+    @pytest.mark.parametrize("name", ["paper_mix.json", "hetero_fleet.json"])
+    def test_committed_specs_check(self, name, capsys):
+        path = os.path.join(self.SPEC_DIR, name)
+        assert cli_main(["check", "--spec", path]) == 0
+        assert "spec OK" in capsys.readouterr().out
+
+    def test_simulate_tiny_with_check_and_out(self, tmp_path, capsys):
+        out = str(tmp_path / "report.json")
+        path = os.path.join(self.SPEC_DIR, "paper_mix.json")
+        rc = cli_main(["simulate", "--spec", path, "--events", "800",
+                       "--check", "--out", out])
+        assert rc == 0
+        assert "byte-identical: True" in capsys.readouterr().out
+        report = RunReport.load(out)
+        assert report.executor == "simulator"
+        assert report.spec["workload"]["events"] == 800
+
+    def test_sweep_dry_run(self, capsys):
+        path = os.path.join(self.SPEC_DIR, "paper_mix.json")
+        rc = cli_main(["sweep", "--spec", path, "--dry-run",
+                       "--axis", "cost_model.strategy=time_only,space_time"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "2 cells" in out and "dry run" in out
+
+    def test_sweep_executes_and_writes_bench_json(self, tmp_path, capsys):
+        out = str(tmp_path / "bench.json")
+        path = os.path.join(self.SPEC_DIR, "paper_mix.json")
+        rc = cli_main(["sweep", "--spec", path, "--events", "500",
+                       "--axis", "cost_model.strategy=time_only,space_time",
+                       "--json", out])
+        assert rc == 0
+        doc = json.load(open(out))
+        assert doc["schema_version"] == SCHEMA_VERSION
+        assert set(doc["sections"]) == {"strategy=time_only",
+                                        "strategy=space_time"}
+
+    def test_bad_spec_is_a_clean_user_error(self, tmp_path, capsys):
+        path = str(tmp_path / "bad.json")
+        with open(path, "w") as fh:
+            json.dump({"router": {"policy": "nope"}}, fh)
+        rc = cli_main(["check", "--spec", path])
+        assert rc == 2
+        assert "unknown router" in capsys.readouterr().err
+
+    def test_mistyped_value_is_a_clean_user_error(self, tmp_path, capsys):
+        # "tenants": "8" raises TypeError inside __post_init__ comparisons;
+        # the CLI must fold it into the one-line spec-error contract
+        path = str(tmp_path / "typed.json")
+        with open(path, "w") as fh:
+            json.dump({"workload": {"tenants": "8"}}, fh)
+        rc = cli_main(["check", "--spec", path])
+        assert rc == 2
+        assert "spec error" in capsys.readouterr().err
+
+    def test_set_override(self, capsys):
+        rc = cli_main(["check", "--set", "router.policy=affinity",
+                       "--set", "fleet.replicas=3"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "router=affinity" in out and "3 replica(s)" in out
+
+
+# ----------------------------------------------------- hypothesis property
+try:
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    settings.register_profile("api_ci", max_examples=30, deadline=None)
+    settings.load_profile("api_ci")
+
+    spec_strategy = st.builds(
+        SystemSpec,
+        workload=st.builds(
+            WorkloadSpec,
+            mix=st.sampled_from(("sgemm", "fleet", "serving", "single")),
+            tenants=st.integers(1, 16),
+            process=st.sampled_from(("poisson", "mmpp", "diurnal", "flash")),
+            events=st.integers(0, 5000),
+            seed=st.integers(0, 2**31 - 1),
+            rho=st.floats(0.05, 3.0, allow_nan=False),
+            zipf_a=st.floats(0.0, 2.0, allow_nan=False),
+        ),
+        fleet=st.builds(
+            FleetSpec,
+            replicas=st.integers(1, 8),
+            specs=st.one_of(
+                st.none(),
+                st.lists(st.sampled_from(sorted(HARDWARE_SPECS)),
+                         min_size=1, max_size=4).map(tuple)),
+            autoscale=st.one_of(st.none(), st.builds(
+                AutoscaleSpec,
+                max_replicas=st.integers(1, 8),
+                spinup_s=st.floats(0.0, 1e-3, allow_nan=False))),
+        ),
+        router=st.builds(RouterSpec,
+                         policy=st.sampled_from(
+                             ("round_robin", "jsq", "least_cost", "affinity"))),
+        scheduler=st.one_of(st.none(), st.builds(
+            SchedulerSpec,
+            batching_window_s=st.floats(0.0, 0.01, allow_nan=False),
+            batching_policy=st.sampled_from(("fixed", "slo_adaptive")),
+            max_superkernel_size=st.integers(1, 256),
+        )),
+        cost_model=st.builds(
+            CostModelSpec,
+            hardware=st.sampled_from(sorted(HARDWARE_SPECS)),
+            strategy=st.sampled_from(
+                ("time_only", "space_only", "space_time", "exclusive")),
+            compile_us=st.floats(0.0, 1000.0, allow_nan=False),
+        ),
+    )
+
+    class TestRoundTripProperty:
+        @given(spec=spec_strategy)
+        def test_from_dict_to_dict_idempotent(self, spec):
+            d = spec.to_dict()
+            again = SystemSpec.from_dict(d)
+            assert again == spec
+            assert again.to_dict() == d
+            # and the dict is genuinely JSON-portable
+            assert SystemSpec.from_dict(json.loads(json.dumps(d))) == spec
+
+        @settings(max_examples=5, deadline=None)
+        @given(seed=st.integers(0, 2**16), tenants=st.integers(1, 6),
+               router=st.sampled_from(("jsq", "least_cost", "affinity")))
+        def test_roundtripped_spec_rebuilds_identical_metrics(
+                self, seed, tenants, router):
+            spec = SystemSpec(
+                workload=WorkloadSpec(mix="fleet", tenants=tenants,
+                                      events=400, seed=seed, rho=0.9),
+                fleet=FleetSpec(replicas=2),
+                router=RouterSpec(policy=router),
+                scheduler=SchedulerSpec(batching_window_s=0.0005,
+                                        max_superkernel_size=32),
+                cost_model=CostModelSpec(compile_us=100.0),
+            )
+            a = spec.build().run_metrics().to_json()
+            b = SystemSpec.from_json(spec.to_json()).build() \
+                .run_metrics().to_json()
+            assert a == b
