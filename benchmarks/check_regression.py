@@ -9,7 +9,7 @@ PR, while a >10% tail-latency or goodput regression fails CI.
 Direction-aware: a row regresses only in its bad direction —
 
     lower is better    .../p50  .../p95  .../p99        (latency)
-    higher is better   .../attainment  .../goodput
+    higher is better   .../attainment  .../goodput  .../events_per_s
 
 Everything else (utilization, imbalance, cold fraction, spread, ...) is
 informational: tracked in the JSON, never gated — those metrics trade
@@ -38,7 +38,7 @@ import sys
 from typing import Dict, List, Tuple
 
 LOWER_BETTER = ("/p50", "/p95", "/p99")
-HIGHER_BETTER = ("/attainment", "/goodput")
+HIGHER_BETTER = ("/attainment", "/goodput", "/events_per_s")
 
 # below this, a metric is noise-floor: relative comparison of two nearly
 # zero values (e.g. 0.0001% attainment) would gate on float dust

@@ -18,7 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced sweeps")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: table1,fig2,fig3,fig4,fig5,trace,sim,fleet,hetero,roofline")
+                    help="comma-separated subset: table1,fig2,fig3,fig4,fig5,trace,sim,fleet,hetero,roofline,speed")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -36,6 +36,7 @@ def main() -> None:
         fig5_replicas,
         fleet_sweep,
         roofline_report,
+        sim_speed,
         sim_sweep,
         table1_sgemm,
     )
@@ -63,6 +64,10 @@ def main() -> None:
     if want("hetero"):
         fleet_sweep.run_hetero(events=5_000 if args.quick else 20_000,
                                autoscale=True, csv_rows=csv_rows)
+    if want("speed"):
+        sim_speed.run(events=100_000 if args.quick else 1_000_000,
+                      fleet_events=100_000 if args.quick else 2_000_000,
+                      repeats=1 if args.quick else 3, csv_rows=csv_rows)
     if want("roofline"):
         roofline_report.run(csv_rows=csv_rows)
         roofline_report.run(mesh="pod2", csv_rows=csv_rows)

@@ -1,0 +1,214 @@
+"""Simulator speed trajectory: events/sec for solo and fleet runs.
+
+The simulator's value is policy sweeps at scale — millions of simulated
+arrivals in seconds on CPU — so its throughput is a gated deliverable,
+not a nice-to-have. This benchmark times the REAL entry points
+(``Simulator.run`` / ``FleetSimulator.run`` over a seeded trace,
+trace generation included, exactly what a sweep pays) and emits an
+events-per-second row per section:
+
+    sim_speed/solo/events_per_s     1 pump, paper SGEMM mix, Poisson
+    sim_speed/fleet/events_per_s    8 round-robin replicas, Zipf mix
+
+Rows are gated HIGHER-IS-BETTER by ``check_regression.py`` (25%
+tolerance in CI — wall-clock rows need more slack than deterministic
+latency rows). Each section takes the best of ``--repeats`` runs: timing
+noise is one-sided, so max-of-N is the stable statistic.
+
+Refresh the committed baseline with the SAME arguments CI uses:
+
+    PYTHONPATH=src python benchmarks/sim_speed.py --events 200000 \
+        --fleet-events 100000 --repeats 3 \
+        --json benchmarks/baselines/BENCH_baseline_sim_speed.json
+
+Full tier (the PR-acceptance numbers): defaults time 1M solo events and
+8x250K fleet events; ``--full`` adds a 100M-event solo smoke (streamed,
+O(chunk) memory — it exists to prove scale, expect a few minutes).
+``--workers K`` additionally times the sharded fleet path
+(informational, never gated: on a single-core runner fork parallelism
+measures the scheduler, not the simulator).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.sim import (
+    FleetSimulator,
+    PoissonTrace,
+    RooflineCostModel,
+    Simulator,
+    estimate_capacity_hz,
+    fleet_sgemm_mix,
+    paper_sgemm_mix,
+    to_bench_json,  # noqa: F401  (re-export parity with sibling sweeps)
+)
+from repro.sim.metrics import SCHEMA_VERSION
+
+SOLO_TENANTS = 8
+FLEET_TENANTS = 16
+FLEET_REPLICAS = 8
+RHO = 0.7
+
+
+def _solo_once(events: int, seed: int) -> Tuple[float, Dict[str, float]]:
+    mix = paper_sgemm_mix(SOLO_TENANTS)
+    model = RooflineCostModel()
+    rate = RHO * estimate_capacity_hz(mix, model)
+    trace = PoissonTrace(mix, rate, events, seed=seed)
+    sim = Simulator(cost_model=model)
+    t0 = time.perf_counter()
+    m = sim.run(trace)
+    dt = time.perf_counter() - t0
+    return events / dt, m.summary()
+
+
+def _fleet_once(events: int, seed: int,
+                workers: int = 1) -> Tuple[float, Dict[str, float]]:
+    mix = fleet_sgemm_mix(FLEET_TENANTS)
+    rate = RHO * FLEET_REPLICAS * estimate_capacity_hz(mix, RooflineCostModel())
+    trace = PoissonTrace(mix, rate, events, seed=seed)
+    fleet = FleetSimulator(FLEET_REPLICAS, router="round_robin",
+                           workers=workers)
+    t0 = time.perf_counter()
+    m = fleet.run(trace)
+    dt = time.perf_counter() - t0
+    return events / dt, m.summary()
+
+
+def _best_of(fn, repeats: int):
+    best_rate, summary = 0.0, None
+    for _ in range(max(1, repeats)):
+        rate, s = fn()
+        if rate > best_rate:
+            best_rate, summary = rate, s
+    return best_rate, summary
+
+
+def run(events: int = 1_000_000, fleet_events: int = 2_000_000,
+        repeats: int = 3, seed: int = 0, workers: int = 0,
+        full: bool = False, json_path: Optional[str] = None,
+        csv_rows=None) -> Dict[str, float]:
+    t_wall = time.perf_counter()
+    print(f"\n=== sim_speed: solo {events} events, fleet "
+          f"{FLEET_REPLICAS}x{fleet_events // FLEET_REPLICAS} events, "
+          f"best of {repeats} ===")
+
+    rows: List[Tuple[str, float, str]] = []
+    extra: Dict = {"events": events, "fleet_events": fleet_events,
+                   "repeats": repeats, "seed": seed,
+                   "fleet_replicas": FLEET_REPLICAS}
+
+    solo_rate, solo_sum = _best_of(lambda: _solo_once(events, seed), repeats)
+    rows.append(("sim_speed/solo/events_per_s", solo_rate, "events_per_s"))
+    extra["solo_completed"] = solo_sum["completed"]
+    print(f"solo : {solo_rate:12,.0f} events/s "
+          f"(completed={solo_sum['completed']:.0f}, "
+          f"p95={solo_sum['p95_s'] * 1e3:.3f}ms)")
+
+    fleet_rate, fleet_sum = _best_of(
+        lambda: _fleet_once(fleet_events, seed + 1), repeats)
+    rows.append(("sim_speed/fleet/events_per_s", fleet_rate, "events_per_s"))
+    extra["fleet_completed"] = fleet_sum["completed"]
+    print(f"fleet: {fleet_rate:12,.0f} events/s "
+          f"(completed={fleet_sum['completed']:.0f}, "
+          f"p95={fleet_sum['p95_s'] * 1e3:.3f}ms)")
+
+    if workers > 0:
+        # informational only (never a gated suffix): fork parallelism on
+        # shared CI cores measures the host, not the simulator
+        sh_rate, _ = _best_of(
+            lambda: _fleet_once(fleet_events, seed + 1, workers=workers),
+            repeats)
+        rows.append((f"sim_speed/fleet_workers{workers}/sharded_events_per_s",
+                     sh_rate, "events_per_s (ungated)"))
+        print(f"fleet (workers={workers}): {sh_rate:12,.0f} events/s")
+
+    if full:
+        print("\n--- --full: 100M-event solo smoke (streamed) ---")
+        smoke_rate, smoke_sum = _solo_once(100_000_000, seed)
+        rows.append(("sim_speed/solo_100m/smoke_events_per_s", smoke_rate,
+                     "events_per_s (ungated)"))
+        extra["smoke_completed"] = smoke_sum["completed"]
+        print(f"100M solo: {smoke_rate:12,.0f} events/s "
+              f"(completed={smoke_sum['completed']:.0f})")
+
+    if csv_rows is not None:
+        csv_rows.extend(rows)
+    if json_path:
+        doc = {
+            "benchmark": "sim_speed",
+            "schema_version": SCHEMA_VERSION,
+            "rows": [{"name": n, "us_per_call": v, "derived": d}
+                     for n, v, d in rows],
+            "extra": extra,
+        }
+        with open(json_path, "w") as fh:
+            fh.write(json.dumps(doc, indent=2, sort_keys=True))
+        print(f"\nwrote {json_path}")
+
+    print(f"total wall time: {time.perf_counter() - t_wall:.1f}s")
+    return {n: v for n, v, _ in rows}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--events", type=int, default=1_000_000,
+                    help="solo section arrivals")
+    ap.add_argument("--fleet-events", type=int, default=2_000_000,
+                    help=f"fleet section arrivals (over {FLEET_REPLICAS} "
+                         f"replicas)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="runs per section; best (max events/s) is reported")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="also time the sharded fleet path with this many "
+                         "worker processes (0 = skip; informational)")
+    ap.add_argument("--full", action="store_true",
+                    help="add the 100M-event solo smoke (minutes)")
+    ap.add_argument("--json", default=None, help="write BENCH-style JSON here")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="compare against a committed baseline JSON and exit "
+                         "non-zero on >tolerance events/sec regressions")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative slack for --check (default 0.25: "
+                         "wall-clock rows are noisier than latency rows)")
+    args = ap.parse_args()
+
+    rates = run(events=args.events, fleet_events=args.fleet_events,
+                repeats=args.repeats, seed=args.seed, workers=args.workers,
+                full=args.full, json_path=args.json)
+
+    if args.check:
+        try:
+            from benchmarks.check_regression import compare
+        except ModuleNotFoundError:
+            # invoked as `python benchmarks/sim_speed.py` rather than -m:
+            # resolve the sibling module from this file's directory
+            sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+            from check_regression import compare
+
+        with open(args.check) as fh:
+            base_doc = json.load(fh)
+        baseline = {r["name"]: float(r["us_per_call"])
+                    for r in base_doc.get("rows", [])}
+        problems, gated = compare(baseline, rates, args.tolerance)
+        if problems:
+            print(f"REGRESSION GATE [sim_speed]: {len(problems)} problem(s) "
+                  f"over {gated} gated rows", file=sys.stderr)
+            for p in problems:
+                print(f"  {p}", file=sys.stderr)
+            print("If the slowdown is intentional, refresh the baseline "
+                  "(see module docstring) and commit it.", file=sys.stderr)
+            sys.exit(1)
+        print(f"regression gate [sim_speed]: {gated} gated rows within "
+              f"{args.tolerance * 100.0:.0f}% of baseline")
+
+
+if __name__ == "__main__":
+    main()

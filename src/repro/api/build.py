@@ -204,6 +204,7 @@ class FleetRun:
             specs=list(fleet.specs) if fleet.specs else None,
             strategy=cost.strategy,
             autoscaler=fleet.autoscale.build() if fleet.autoscale else None,
+            workers=fleet.workers,
         )
         return sim.run(trace)
 

@@ -172,15 +172,24 @@ class FleetSpec:
     the fleet heterogeneous; ``autoscale`` makes it elastic between the
     policy's min/max. One replica with no specs/autoscale builds the solo
     ``Simulator``; anything else builds the ``FleetSimulator``.
+
+    ``workers > 1`` shards the replica pumps across that many forked
+    processes (``repro.sim.shard``) — byte-identical metrics, restricted
+    to independent-replica configurations (round-robin router, no
+    autoscale, fixed batching window); ``SystemSpec`` validates the
+    combination eagerly.
     """
 
     replicas: int = 1
     specs: Optional[Tuple[str, ...]] = None
     autoscale: Optional[AutoscaleSpec] = None
+    workers: int = 1
 
     def __post_init__(self) -> None:
         if self.replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {self.replicas}")
+        if self.workers < 1:
+            raise ValueError(f"fleet.workers must be >= 1, got {self.workers}")
         if self.specs is not None:
             if not self.specs:
                 raise ValueError("fleet.specs must be non-empty when given")
@@ -195,7 +204,7 @@ class FleetSpec:
     @property
     def is_fleet(self) -> bool:
         return (self.replicas > 1 or self.specs is not None
-                or self.autoscale is not None)
+                or self.autoscale is not None or self.workers > 1)
 
     @property
     def max_replicas(self) -> int:
@@ -209,6 +218,7 @@ class FleetSpec:
             "replicas": self.replicas,
             "specs": list(self.specs) if self.specs is not None else None,
             "autoscale": self.autoscale.to_dict() if self.autoscale else None,
+            "workers": self.workers,
         }
 
     @classmethod
@@ -347,6 +357,25 @@ class SystemSpec:
                 "own per-hardware rooflines, and per-replica calibrated "
                 "tables (FleetCalibrator) are not spec-addressable yet "
                 "(see ROADMAP); drop fleet.specs or use kind='roofline'")
+        if self.fleet.workers > 1:
+            # sharded execution needs provably independent replicas —
+            # same conditions repro.sim.shard enforces at run time, but
+            # surfaced at spec-load time per the front-door contract
+            if self.router.policy != "round_robin":
+                raise ValueError(
+                    "fleet.workers > 1 requires router.policy="
+                    "'round_robin' (state-oblivious routing keeps "
+                    f"replicas independent); got {self.router.policy!r}")
+            if self.fleet.autoscale is not None:
+                raise ValueError(
+                    "fleet.workers > 1 cannot combine with fleet.autoscale:"
+                    " scale decisions read fleet-wide state; drop one")
+            if (self.scheduler is not None
+                    and self.scheduler.batching_policy != "fixed"):
+                raise ValueError(
+                    "fleet.workers > 1 requires the fixed batching window "
+                    "(scheduler.batching_policy='fixed'); got "
+                    f"{self.scheduler.batching_policy!r}")
 
     # ----------------------------------------------------------- round trip
     def to_dict(self) -> Dict:

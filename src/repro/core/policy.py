@@ -27,6 +27,13 @@ class BatchingPolicy:
     # True if window_s inspects every pending item (the scheduler then
     # materializes the bucket's pending list; False keeps ripeness O(1)).
     needs_pending: bool = False
+    # True if window_s is a constant — independent of both the pending
+    # set and the clock. Lets the simulator cache one window value and
+    # maintain per-bucket ripeness instants incrementally (a bucket's
+    # instant is fixed at submit time) instead of rescanning every
+    # bucket per event. Time- or slack-dependent policies must leave
+    # this False: their instants drift as the clock advances.
+    stable_window: bool = False
 
     def window_s(self, pending: Sequence, now: float) -> float:
         """Max time the oldest pending item may keep waiting (seconds).
@@ -41,6 +48,7 @@ class FixedWindowPolicy(BatchingPolicy):
     """The paper's policy: one constant accumulation window."""
 
     name = "fixed"
+    stable_window = True
 
     def __init__(self, window_s: float):
         self._window_s = window_s

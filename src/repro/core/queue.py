@@ -29,6 +29,19 @@ class ShapeBucket:
     N: int
     dtype: str
 
+    def __post_init__(self) -> None:
+        # Buckets are dict keys on every queue/scheduler hot path and each
+        # simulated event hashes its bucket several times; cache the tuple
+        # hash once (same value the generated __hash__ would compute, so
+        # dict layouts are unchanged). Not a field: repr/eq/asdict see
+        # only the shape.
+        object.__setattr__(
+            self, "_hash",
+            hash((self.op, self.M, self.K, self.N, self.dtype)))
+
+    def __hash__(self) -> int:
+        return self._hash
+
     @staticmethod
     def for_gemm(x: jax.Array, w: jax.Array) -> "ShapeBucket":
         M, K = x.shape
@@ -83,20 +96,34 @@ class GemmProblem:
 
 
 class WorkQueue:
-    """FIFO-per-bucket pending-workload store with per-tenant accounting."""
+    """FIFO-per-bucket pending-workload store with per-tenant accounting.
 
-    def __init__(self) -> None:
+    ``track_tenants=False`` skips the per-tenant counters (and makes
+    ``pending_for_tenant`` constant 0): the scheduler only consults them
+    when an admission cap is configured, and the simulator pushes millions
+    of items through here — one defaultdict increment per push is real
+    money on that path.
+    """
+
+    def __init__(self, track_tenants: bool = True) -> None:
         self._buckets: Dict[Hashable, Deque] = collections.defaultdict(
             collections.deque
         )
         self._per_tenant: Dict[int, int] = collections.defaultdict(int)
+        self._track_tenants = track_tenants
+        self._count = 0
 
-    def push(self, item) -> None:
-        self._buckets[item.bucket].append(item)
-        self._per_tenant[item.tenant_id] += 1
+    def push(self, item) -> int:
+        """Append; returns the item's bucket depth after the push."""
+        q = self._buckets[item.bucket]
+        q.append(item)
+        self._count += 1
+        if self._track_tenants:
+            self._per_tenant[item.tenant_id] += 1
+        return len(q)
 
     def __len__(self) -> int:
-        return sum(len(q) for q in self._buckets.values())
+        return self._count
 
     def pending_for_tenant(self, tenant_id: int) -> int:
         return self._per_tenant.get(tenant_id, 0)
@@ -120,11 +147,16 @@ class WorkQueue:
     def pop_batch(self, bucket: Hashable, max_n: int) -> List:
         """Pop up to max_n items from a bucket, FIFO order."""
         q = self._buckets[bucket]
-        out = []
-        while q and len(out) < max_n:
-            item = q.popleft()
-            self._per_tenant[item.tenant_id] -= 1
-            out.append(item)
+        if len(q) <= max_n:
+            out = list(q)
+            q.clear()
+        else:
+            out = [q.popleft() for _ in range(max_n)]
+        self._count -= len(out)
+        if self._track_tenants:
+            per_tenant = self._per_tenant
+            for item in out:
+                per_tenant[item.tenant_id] -= 1
         return out
 
     def drain(self) -> List:
@@ -133,6 +165,7 @@ class WorkQueue:
             out.extend(q)
             q.clear()
         self._per_tenant.clear()
+        self._count = 0
         return out
 
 

@@ -45,6 +45,10 @@ class SchedulerStats:
     total_cost: float = 0.0
     busy_time_s: float = 0.0
     rejected: int = 0
+    # times a simulated pump found nothing ripe at a computed ripeness
+    # instant and had to re-pump one epsilon later (float rounding left
+    # the window a ULP short of elapsed) — drift that used to be silent
+    ripe_nudges: int = 0
 
     @property
     def total_flops(self) -> float:
@@ -92,6 +96,9 @@ class DynamicSpaceTimeScheduler:
         self.stats = SchedulerStats()
         self.on_evict = on_evict
         self.evicted: List[int] = []
+        # without an admission cap the per-tenant counters are never read;
+        # skipping them saves a defaultdict update per submitted workload
+        self.queue._track_tenants = self.schedule.max_pending_per_tenant is not None
 
     # ---------------------------------------------------------------- intake
     def submit(self, item, now: Optional[float] = None) -> bool:
@@ -192,21 +199,24 @@ class DynamicSpaceTimeScheduler:
             self.clock.advance(self.cost_model(batch))
         t1 = self.clock.now()
 
-        self.stats.dispatches += 1
-        self.stats.problems_completed += len(batch)
-        self.stats.total_cost += sum(float(getattr(p, "cost", 0.0)) for p in batch)
-        self.stats.busy_time_s += t1 - t0
+        stats = self.stats
+        stats.dispatches += 1
+        stats.problems_completed += len(batch)
+        stats.total_cost += sum([float(getattr(p, "cost", 0.0)) for p in batch])
+        stats.busy_time_s += t1 - t0
         if self.on_dispatch is not None:
             self.on_dispatch(batch, t1 - t0, self.replica_id)
 
-        for p, out in zip(batch, outs):
-            p.result = out
-            p.completion_time = t1
-            latency = t1 - p.arrival_time
-            self.monitor.record(
-                p.tenant_id, latency, p.slo_s,
-                kind=getattr(p, "kind", "default"),
-            )
+        if outs is None:
+            # executor contract: None means "no per-item results" (the
+            # simulator's no-op path) — skip the result zip entirely
+            for p in batch:
+                p.completion_time = t1
+        else:
+            for p, out in zip(batch, outs):
+                p.result = out
+                p.completion_time = t1
+        self.monitor.record_batch(batch, t1)
 
         self._evict_stragglers()
         return batch
@@ -229,6 +239,7 @@ class DynamicSpaceTimeScheduler:
             "achieved_tflops": self.stats.achieved_tflops,
             "cache_hit_rate": self.cache.stats.hit_rate,
             "evicted_tenants": float(len(self.evicted)),
+            "ripe_nudges": float(self.stats.ripe_nudges),
         }
         rep.update(self.monitor.summary())
         return rep

@@ -65,17 +65,65 @@ class LatencyMonitor:
         self.eviction_ratio = eviction_ratio
         self.tenants: Dict[int, TenantLatency] = {}
         self.by_kind: Dict[str, Deque[float]] = {}
+        # False = keep only the signals the scheduler acts on (EWMA,
+        # counts, violations) and skip the per-item history lists. The
+        # simulator flips this off: its metrics come from
+        # MetricsAccumulator, and an unbounded per-tenant history is a
+        # float leaked per event at million-event scale. History-derived
+        # views (summary / percentiles / spread) then report empty.
+        self.record_history = True
 
     def record(
         self, tenant_id: int, latency_s: float, slo_s: float,
         kind: str = "default",
     ) -> None:
-        self.tenants.setdefault(tenant_id, TenantLatency()).record(
-            latency_s, slo_s, self.alpha
+        t = self.tenants.setdefault(tenant_id, TenantLatency())
+        t.count += 1
+        if latency_s > slo_s:
+            t.slo_violations += 1
+        t.ewma_s = (
+            latency_s
+            if t.ewma_s is None
+            else self.alpha * latency_s + (1 - self.alpha) * t.ewma_s
         )
-        self.by_kind.setdefault(
-            kind, collections.deque(maxlen=self.KIND_HISTORY_MAX)
-        ).append(latency_s)
+        if self.record_history:
+            t.history.append(latency_s)
+            self.by_kind.setdefault(
+                kind, collections.deque(maxlen=self.KIND_HISTORY_MAX)
+            ).append(latency_s)
+
+    def record_batch(self, items, completion_s: float) -> None:
+        """Record one dispatch's completions: ``completion_s -
+        item.arrival_time`` against ``item.slo_s`` per item, in batch
+        order. Same arithmetic as per-item ``record`` with the dict and
+        attribute traffic hoisted out of the loop — the scheduler calls
+        this once per dispatch instead of once per workload.
+        """
+        alpha = self.alpha
+        one_minus = 1 - alpha
+        tenants = self.tenants
+        keep_history = self.record_history
+        by_kind = self.by_kind
+        for p in items:
+            latency_s = completion_s - p.arrival_time
+            t = tenants.get(p.tenant_id)
+            if t is None:
+                t = TenantLatency()
+                tenants[p.tenant_id] = t
+            t.count += 1
+            if latency_s > p.slo_s:
+                t.slo_violations += 1
+            e = t.ewma_s
+            t.ewma_s = latency_s if e is None \
+                else alpha * latency_s + one_minus * e
+            if keep_history:
+                t.history.append(latency_s)
+                kind = getattr(p, "kind", "default")
+                d = by_kind.get(kind)
+                if d is None:
+                    d = collections.deque(maxlen=self.KIND_HISTORY_MAX)
+                    by_kind[kind] = d
+                d.append(latency_s)
 
     def slo_attainment(self, tenant_id: int) -> float:
         """Per-tenant SLO attainment (1.0 for unknown tenants)."""

@@ -98,19 +98,35 @@ class RooflineCostModel:
         self.eff = small_kernel_efficiency
 
     def __call__(self, batch: Sequence) -> float:
+        # called once per super-dispatch with up to max_superkernel_size
+        # items — the loops below are the simulator's per-item pricing
+        # cost, so the flops/bytes fallbacks are inlined (one pass, no
+        # per-item helper calls) with the exact arithmetic order of the
+        # original sum() generators
         s = self.spec
         fill = s.pipe_fill_s()
         if self.strategy == "time_only":
             tot = 0.0
+            t_compute, t_memory = s.t_compute, s.t_memory
+            eff = self.eff
+            per_item = s.context_switch_s + s.dispatch_overhead_s + fill
             for w in batch:
-                t_item = max(s.t_compute(_flops(w)), s.t_memory(_bytes(w)))
-                tot += s.context_switch_s + s.dispatch_overhead_s + fill \
-                    + t_item / self.eff
+                flops = getattr(w, "flops", None)
+                if flops is None:
+                    flops = getattr(w, "cost", 0.0)
+                t_item = max(t_compute(float(flops)),
+                             t_memory(float(getattr(w, "bytes", 0.0) or 0.0)))
+                tot += per_item + t_item / eff
             return tot
-        roof = max(
-            s.t_compute(sum(_flops(w) for w in batch)),
-            s.t_memory(sum(_bytes(w) for w in batch)),
-        )
+        f_sum = 0.0
+        b_sum = 0.0
+        for w in batch:
+            flops = getattr(w, "flops", None)
+            if flops is None:
+                flops = getattr(w, "cost", 0.0)
+            f_sum += float(flops)
+            b_sum += float(getattr(w, "bytes", 0.0) or 0.0)
+        roof = max(s.t_compute(f_sum), s.t_memory(b_sum))
         if self.strategy == "space_only":
             return s.dispatch_overhead_s + len(batch) * fill + roof / self.eff
         # space_time / exclusive: one wide kernel at the roofline

@@ -69,6 +69,22 @@ from repro.sim.simulator import ReplicaPump, SimWorkload
 from repro.sim.traces import Arrival, Trace
 
 
+def _arrival_stream(trace):
+    """Flatten a trace to ``(t_s, spec, cost)`` triples, preferring the
+    columnar chunk iterator: plain-float columns and an interned spec
+    table instead of one ``Arrival`` namedtuple (plus numpy-scalar
+    unboxing) per event. Values are bit-identical either way — the chunk
+    contract — so the fleet loop's timeline does not depend on which
+    path fed it."""
+    iter_chunks = getattr(trace, "iter_chunks", None)
+    if iter_chunks is None:
+        yield from trace
+        return
+    for times, idx, costs, table in iter_chunks():
+        for t, i, c in zip(times.tolist(), idx.tolist(), costs.tolist()):
+            yield t, table[i], c
+
+
 def fleet_capacity_hz(
     mix: Sequence,
     specs: Sequence[Union[str, HardwareSpec]],
@@ -108,6 +124,13 @@ class FleetSimulator:
     every replica's dispatch tap into per-replica measured-cost tables
     that routing then prices through.
 
+    ``workers > 1`` shards the replica pumps across forked worker
+    processes (``repro.sim.shard``): byte-identical metrics to
+    ``workers=1``, but restricted to configurations where replicas are
+    provably independent — a fresh round-robin router, no autoscaler, no
+    calibration, and a stable-window policy. ``run`` raises an
+    actionable error otherwise.
+
     One-shot: state (routed counts, scale events, calibration tables)
     accumulates across ``run`` — build a fresh instance per trace, or use
     ``simulate_fleet``.
@@ -125,14 +148,18 @@ class FleetSimulator:
         strategy: str = "space_time",
         autoscaler: Optional[Union[Autoscaler, str]] = None,
         calibration: Optional[FleetCalibrator] = None,
+        workers: int = 1,
     ):
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
         if specs is not None and cost_model is not None:
             raise ValueError(
                 "pass per-replica specs OR a shared cost_model, not both")
         if specs is not None and not specs:
             raise ValueError("specs must be non-empty when given")
+        self.workers = int(workers)
         self.router = make_router(router) if isinstance(router, str) else router
         self.schedule = schedule
         self.start_s = float(start_s)
@@ -265,11 +292,15 @@ class FleetSimulator:
                 stalled |= 1 << best_i
 
     def run(self, trace: Union[Trace, Iterable[Arrival]]) -> FleetMetrics:
+        if self.workers > 1:
+            # deferred import: shard imports this module
+            from repro.sim.shard import run_sharded
+            return run_sharded(self, trace)
         router, scaler = self.router, self.autoscaler
         t_start = self.start_s
         next_tick = t_start + scaler.interval_s if scaler is not None else None
 
-        for t_s, spec, cost in trace:
+        for t_s, spec, cost in _arrival_stream(trace):
             while next_tick is not None and t_s >= next_tick:
                 self._drain_until(next_tick)
                 self._apply_autoscale(next_tick)
@@ -361,10 +392,11 @@ def simulate_fleet(
     strategy: str = "space_time",
     autoscaler: Optional[Union[Autoscaler, str]] = None,
     calibration: Optional[FleetCalibrator] = None,
+    workers: int = 1,
 ) -> FleetMetrics:
     """One-shot convenience wrapper: fresh fleet, one trace, metrics."""
     return FleetSimulator(
         replicas, router=router, schedule=schedule, cost_model=cost_model,
         compile_s=compile_s, specs=specs, strategy=strategy,
-        autoscaler=autoscaler, calibration=calibration,
+        autoscaler=autoscaler, calibration=calibration, workers=workers,
     ).run(trace)

@@ -53,6 +53,31 @@ class MetricsAccumulator:
             ki = self._kinds.setdefault(kind, len(self._kinds))
         self._kind_idx.append(ki)
 
+    def add_batch(self, done: Sequence) -> None:
+        """Absorb one dispatch's completed workloads (arrival/completion
+        stamps already set). Column-at-a-time ``array.extend`` over
+        listcomps: one C call per column per dispatch instead of five
+        Python-level appends per completion, with identical column
+        contents (batch order preserved).
+        """
+        kinds = self._kinds
+        try:
+            kidx = [kinds[w.kind] for w in done]
+        except KeyError:
+            # rare path (new kind seen): intern first so the columns are
+            # only extended once the whole index list exists
+            kidx = []
+            for w in done:
+                ki = kinds.get(w.kind)
+                if ki is None:
+                    ki = kinds.setdefault(w.kind, len(kinds))
+                kidx.append(ki)
+        self._lat.extend([w.completion_time - w.arrival_time for w in done])
+        self._slo.extend([w.slo_s for w in done])
+        self._cost.extend([w.cost for w in done])
+        self._tenant.extend([w.tenant_id for w in done])
+        self._kind_idx.extend(kidx)
+
     def __len__(self) -> int:
         return len(self._lat)
 

@@ -25,11 +25,24 @@ under overload is measured honestly.
 Determinism: trace generation is seeded numpy, the clock is virtual, the
 cost model is pure arithmetic — same seed in, byte-identical metrics JSON
 out. That contract is what lets CI assert on simulated SLO orderings.
+
+Performance: ripeness is tracked two ways. Policies declaring
+``stable_window`` (the fixed window) get a *calendar*: a lazy-deletion
+heap of per-bucket ripeness instants maintained incrementally on submit
+and dispatch, making ``next_ripe_time`` O(1) amortized instead of a scan
+over every pending bucket per event. Time-dependent policies
+(slo_adaptive) keep the legacy scan — their instants drift with the
+clock, so cached instants would be stale the moment they were stored.
+Both paths compute ripeness with the exact same float expression
+(``max(now, oldest + window)``), so the dispatch timeline is
+bit-identical between them.
 """
 
 from __future__ import annotations
 
+import math
 from collections import deque
+from heapq import heappop, heappush
 from typing import Callable, Iterable, List, Optional, Sequence
 
 from repro.config import ScheduleConfig
@@ -39,9 +52,13 @@ from repro.sim.costmodel import RooflineCostModel
 from repro.sim.metrics import MetricsAccumulator, SimMetrics
 from repro.sim.traces import Arrival, Trace
 
+_NEG_INF = float("-inf")
 
-def _noop_execute(batch: List) -> List[None]:
-    return [None] * len(batch)
+
+def _noop_execute(batch: List) -> None:
+    # None signals "no per-item results" to the scheduler's dispatch loop,
+    # which then skips the result-assignment zip entirely
+    return None
 
 
 class SimWorkload:
@@ -50,7 +67,9 @@ class SimWorkload:
     Deliberately not the ``Workload`` dataclass: a ``__slots__`` class with
     a no-op executor keeps per-event cost low enough for million-event
     traces (the dataclass's default-factory fields roughly double intake
-    time at that scale).
+    time at that scale). Fields that are never written per-instance
+    (``merge_family``, ``result``, ``execute``) are class attributes — a
+    few fewer stores on a constructor that runs once per simulated event.
 
     ``est_s`` is the router's estimated solo dispatch seconds for this
     item (0.0 outside fleet runs) — the pump subtracts it back out of its
@@ -58,8 +77,11 @@ class SimWorkload:
     """
 
     __slots__ = ("tenant_id", "bucket", "cost", "slo_s", "kind", "flops",
-                 "bytes", "merge_family", "execute", "arrival_time",
-                 "result", "completion_time", "est_s")
+                 "bytes", "arrival_time", "completion_time", "est_s")
+
+    merge_family = None           # ragged merge is a live-kernel concern
+    result = None
+    execute = staticmethod(_noop_execute)
 
     def __init__(self, spec, cost: float):
         self.tenant_id = spec.tenant_id
@@ -69,10 +91,7 @@ class SimWorkload:
         self.kind = spec.kind
         self.flops = spec.flops
         self.bytes = spec.bytes
-        self.merge_family = None  # ragged merge is a live-kernel concern
-        self.execute = _noop_execute
         self.arrival_time = 0.0
-        self.result = None
         self.completion_time = None
         self.est_s = 0.0
 
@@ -103,6 +122,9 @@ class ReplicaPump:
             cost_model=self.cost_model,
             replica_id=replica_id,
         )
+        # simulated completions are consumed by MetricsAccumulator, not
+        # the monitor; per-item history lists would leak a float per event
+        self.scheduler.monitor.record_history = False
         # metric sinks every completion is recorded into (solo: one; fleet:
         # the replica's own + the fleet-wide accumulator)
         self.accs: List[MetricsAccumulator] = []
@@ -122,6 +144,21 @@ class ReplicaPump:
         # million-event trace must not accumulate a million floats.
         self.track_inflight = False
         self._inflight: deque = deque()
+        # ---- ripeness calendar (stable-window policies only) ----
+        # _ripe_at maps bucket -> its current ripeness instant
+        # (oldest_arrival + window; -inf for cap-full buckets, matching
+        # the legacy scan's "full bucket is ripe NOW" via max(now, -inf)).
+        # _heap holds (instant, seq, bucket) with lazy deletion: an entry
+        # is live iff it equals _ripe_at[bucket]; stale entries are
+        # skipped at peek time. seq breaks instant ties without ever
+        # comparing bucket keys (buckets aren't orderable).
+        policy = self.scheduler.policy
+        self._use_calendar = bool(getattr(policy, "stable_window", False))
+        self._window = policy.window_s((), 0.0) if self._use_calendar else 0.0
+        self._cap = self.scheduler.schedule.max_superkernel_size
+        self._ripe_at: dict = {}
+        self._heap: list = []
+        self._seq = 0
 
     # ------------------------------------------------------------- intake
     def submit(self, w: SimWorkload, t_s: float) -> bool:
@@ -134,12 +171,81 @@ class ReplicaPump:
         admitted = self.scheduler.submit(w, now=t_s)
         if admitted:
             self.pending_est_s += w.est_s
+            if self._use_calendar:
+                b = w.bucket
+                self._cal_note_push(
+                    b, t_s, len(self.scheduler.queue._buckets[b]))
         # pump even when admission rejected: advancing to t_s may have
         # ripened other buckets (drain_until only covers instants < t_s)
+        if self._use_calendar:
+            # with the calendar we know the earliest ripeness instant
+            # without scanning; skip the (previously unconditional) pump
+            # when nothing can possibly be ripe. The guard is a few ULPs
+            # wide: the legacy ripeness test computes (now - oldest) >=
+            # window while the calendar stores oldest + window — not
+            # bit-equivalent at the boundary — and a spuriously attempted
+            # pump is a harmless no-op while a skipped-but-due pump would
+            # change the timeline.
+            m = self._ripe_min()
+            now = self.clock.now()
+            if m is None or m > now + (1e-9 + abs(now) * 1e-12):
+                return admitted
         self._absorb(self.scheduler.pump())
         return admitted
 
     # ---------------------------------------------------------- event loop
+    def _cal_note_push(self, bucket, arrival_s: float, depth: int) -> None:
+        """Calendar maintenance after one item lands in ``bucket``."""
+        ripe_at = self._ripe_at
+        if depth >= self._cap:
+            if ripe_at.get(bucket) != _NEG_INF:
+                ripe_at[bucket] = _NEG_INF
+                self._seq += 1
+                heappush(self._heap, (_NEG_INF, self._seq, bucket))
+        elif depth == 1:
+            # bucket just went empty -> nonempty: its instant is fixed
+            # (stable window) at oldest + window
+            t = arrival_s + self._window
+            ripe_at[bucket] = t
+            self._seq += 1
+            heappush(self._heap, (t, self._seq, bucket))
+        # depths in between leave the instant untouched: the oldest
+        # arrival didn't change, so neither did the ripeness instant
+
+    def _cal_note_dispatch(self, done: List) -> None:
+        """Recompute the instants of every bucket a pump touched."""
+        queue = self.scheduler.queue
+        buckets_map = queue._buckets
+        ripe_at = self._ripe_at
+        window = self._window
+        cap = self._cap
+        for b in {w.bucket for w in done}:
+            q = buckets_map.get(b)
+            if not q:
+                ripe_at.pop(b, None)   # heap entries die lazily
+            elif len(q) >= cap:
+                if ripe_at.get(b) != _NEG_INF:
+                    ripe_at[b] = _NEG_INF
+                    self._seq += 1
+                    heappush(self._heap, (_NEG_INF, self._seq, b))
+            else:
+                t = q[0].arrival_time + window
+                if ripe_at.get(b) != t:
+                    ripe_at[b] = t
+                    self._seq += 1
+                    heappush(self._heap, (t, self._seq, b))
+
+    def _ripe_min(self) -> Optional[float]:
+        """Earliest live calendar instant (lazy-deleting stale entries)."""
+        heap = self._heap
+        ripe_at = self._ripe_at
+        while heap:
+            t, _, b = heap[0]
+            if ripe_at.get(b) == t:
+                return t
+            heappop(heap)
+        return None
+
     def next_ripe_time(self) -> Optional[float]:
         """Earliest instant any bucket becomes dispatchable.
 
@@ -149,6 +255,12 @@ class ReplicaPump:
         errs at most by how much the window shrank in between), which
         keeps the drain loop strictly progressing.
         """
+        if self._use_calendar:
+            m = self._ripe_min()
+            if m is None:
+                return None
+            now = self.clock.now()
+            return m if m > now else now
         sched = self.scheduler
         now = self.clock.now()
         queue, policy = sched.queue, sched.policy
@@ -170,6 +282,7 @@ class ReplicaPump:
         self.clock.advance_to(t_ripe)
         done = self.scheduler.pump()
         if not done:
+            self.scheduler.stats.ripe_nudges += 1
             self.clock.advance_to(t_ripe + self._RIPE_EPS)
             done = self.scheduler.pump()
         self._absorb(done)
@@ -194,16 +307,21 @@ class ReplicaPump:
                 break
 
     def _absorb(self, done: List) -> None:
-        track = self.track_inflight
-        for w in done:
-            self.pending_est_s -= w.est_s
-            lat = w.completion_time - w.arrival_time
-            for acc in self.accs:
-                acc.add(w.tenant_id, lat, w.slo_s, w.cost, w.kind)
-            if track:
-                self._inflight.append(w.completion_time)
-        if self.pending_est_s < 0.0:  # float dust from += / -= pairs
-            self.pending_est_s = 0.0
+        if not done:
+            return
+        if self._use_calendar:
+            self._cal_note_dispatch(done)
+        if self.track_inflight:
+            # sequential -= preserves the exact float accumulation order
+            # the routing-signal contract (backlog_s) was baselined with
+            pending = self.pending_est_s
+            inflight_append = self._inflight.append
+            for w in done:
+                pending -= w.est_s
+                inflight_append(w.completion_time)
+            self.pending_est_s = pending if pending > 0.0 else 0.0
+        for acc in self.accs:
+            acc.add_batch(done)
 
     # ------------------------------------------------------ routing signals
     def queue_depth(self, now: Optional[float] = None) -> int:
@@ -282,15 +400,99 @@ class Simulator:
         pump = self.pump
         acc = MetricsAccumulator()
         pump.accs = [acc]
-        submit, drain_until = pump.submit, pump.drain_until
         t_start = pump.clock.now()
 
-        for t_s, spec, cost in trace:
-            drain_until(t_s)
-            submit(SimWorkload(spec, cost), t_s)
+        if pump._use_calendar and hasattr(trace, "iter_chunks"):
+            self._run_chunked(trace)
+        else:
+            submit, drain_until = pump.submit, pump.drain_until
+            for t_s, spec, cost in trace:
+                drain_until(t_s)
+                submit(SimWorkload(spec, cost), t_s)
         pump.drain_tail()
 
         return pump.freeze(acc, sim_duration_s=pump.clock.now() - t_start)
+
+    def _run_chunked(self, trace: Trace) -> None:
+        """Columnar intake: the same event sequence as the per-event loop
+        (drain to each arrival, stamp, admit, pump) driven from numpy
+        chunks with the per-event bookkeeping inlined.
+
+        Two deviations from the naive loop, both unobservable:
+
+        * the virtual clock is NOT advanced to arrivals that provably
+          trigger no pump — the clock is only ever READ at pump instants
+          and both paths advance to the same instants before pumping
+          (``drain_tail`` entry re-syncs via one final ``advance_to``);
+        * ``scheduler.submit`` is bypassed when no admission cap is set —
+          its only effects then are the arrival stamp and the queue push,
+          replicated here verbatim.
+        """
+        pump = self.pump
+        clock = pump.clock
+        sched = pump.scheduler
+        queue = sched.queue
+        drain_until = pump.drain_until
+        sched_pump = sched.pump
+        absorb = pump._absorb
+        cal_note_push = pump._cal_note_push
+        ripe_min = pump._ripe_min
+        queue_push = queue.push
+        inf = math.inf
+
+        capped = sched.schedule.max_pending_per_tenant is not None
+        submit_slow = pump.submit
+
+        cval = clock.now()            # tracks the real (virtual) clock
+        m = ripe_min()
+        if m is None:
+            m = inf
+        last_t = cval
+
+        for times, idx, costs, table in trace.iter_chunks():
+            # plain-Python lists iterate ~3x faster than numpy scalars,
+            # and .tolist() round-trips float64 exactly
+            ts = times.tolist()
+            ws = [SimWorkload(table[i], c)
+                  for i, c in zip(idx.tolist(), costs.tolist())]
+            for k, t in enumerate(ts):
+                if m < t and cval < t:
+                    drain_until(t)
+                    cval = clock.now()
+                    m = ripe_min()
+                    if m is None:
+                        m = inf
+                w = ws[k]
+                if capped:
+                    submit_slow(w, t)
+                    cval = clock.now()
+                    m = ripe_min()
+                    if m is None:
+                        m = inf
+                    continue
+                w.arrival_time = t
+                depth = queue_push(w)
+                if depth >= pump._cap or depth == 1:
+                    cal_note_push(w.bucket, t, depth)
+                    v = pump._ripe_at[w.bucket]
+                    if v < m:
+                        m = v
+                now_eff = cval if cval > t else t
+                if m <= now_eff + (1e-9 + abs(now_eff) * 1e-12):
+                    clock.advance_to(t)
+                    done = sched_pump()
+                    if done:
+                        absorb(done)
+                    cval = clock.now()
+                    m = ripe_min()
+                    if m is None:
+                        m = inf
+            if ts:
+                last_t = ts[-1]
+
+        # the per-event loop leaves the clock at max(last pump instant,
+        # last arrival); drain_tail reads it — re-sync before returning
+        clock.advance_to(last_t)
 
 
 def simulate(

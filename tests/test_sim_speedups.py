@@ -1,0 +1,271 @@
+"""Fast-path equivalence contracts for the hardware-fast simulator.
+
+The perf rewrite (chunked columnar intake, calendar-queue ripeness,
+batched absorb, sharded fleet workers) must be INVISIBLE in the output:
+same seed in, byte-identical metrics JSON out. These tests pin that by
+running the SAME seeded trace through the vectorized path and through
+the legacy per-event scan path (calendar off, ``iter_chunks`` hidden)
+and diffing the frozen JSON — and, for the fleet, by diffing
+``workers=K`` sharded runs against single-process.
+
+The hypothesis variants live at the bottom behind the usual importorskip
+guard; plain parametrized versions of the same properties run everywhere.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.api import SystemSpec
+from repro.config import ScheduleConfig
+from repro.sim import (
+    ColdStartCostModel,
+    CsvReplayTrace,
+    FleetSimulator,
+    PoissonTrace,
+    RooflineCostModel,
+    Simulator,
+    estimate_capacity_hz,
+    fleet_sgemm_mix,
+    make_trace,
+    paper_sgemm_mix,
+)
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SMOKE_CSV = REPO / "examples" / "traces" / "smoke_replay.csv"
+
+
+class _PerEventTrace:
+    """Wrapper hiding ``iter_chunks`` so ``Simulator.run`` takes the
+    per-event submit path; with ``pump._use_calendar`` forced off too,
+    this is exactly the pre-rewrite event loop."""
+
+    def __init__(self, trace):
+        self._trace = trace
+
+    def __iter__(self):
+        return iter(self._trace)
+
+
+def _mk_trace(process, mix, events, seed):
+    model = RooflineCostModel()
+    rate = 0.7 * estimate_capacity_hz(mix, model)
+    return make_trace(process, mix, rate, events, seed=seed)
+
+
+def _solo_json(trace, *, legacy, policy="fixed", cold=False):
+    sched = ScheduleConfig(batching_policy=policy)
+    sim = Simulator(schedule=sched, cost_model=RooflineCostModel())
+    if cold:
+        model = ColdStartCostModel(sim.pump.cost_model, compile_s=5e-4,
+                                   clock=sim.clock)
+        sim.pump.cost_model = model
+        sim.scheduler.cost_model = model
+    if legacy:
+        sim.pump._use_calendar = False
+        trace = _PerEventTrace(trace)
+    return sim.run(trace).to_json()
+
+
+# ------------------------------------------------- solo path equivalence
+class TestChunkedEqualsPerEvent:
+    @pytest.mark.parametrize("process", ["poisson", "mmpp", "flash"])
+    @pytest.mark.parametrize("policy", ["fixed", "slo_adaptive"])
+    def test_processes_and_policies(self, process, policy):
+        mix = paper_sgemm_mix(6)
+        fast = _solo_json(_mk_trace(process, mix, 4000, seed=7),
+                          legacy=False, policy=policy)
+        slow = _solo_json(_mk_trace(process, mix, 4000, seed=7),
+                          legacy=True, policy=policy)
+        assert fast == slow
+
+    @pytest.mark.parametrize("strategy", ["time_only", "space_only",
+                                          "space_time"])
+    def test_strategies(self, strategy):
+        mix = paper_sgemm_mix(6)
+
+        def run(legacy):
+            trace = _mk_trace("poisson", mix, 4000, seed=11)
+            sim = Simulator(cost_model=RooflineCostModel(strategy=strategy))
+            if legacy:
+                sim.pump._use_calendar = False
+                trace = _PerEventTrace(trace)
+            return sim.run(trace).to_json()
+
+        assert run(False) == run(True)
+
+    def test_cold_start_accounting(self):
+        """Compile-cache cold starts record per-dispatch series; the
+        chunked loop must hit the cache in the same order."""
+        mix = paper_sgemm_mix(6)
+        fast = _solo_json(_mk_trace("mmpp", mix, 3000, seed=3),
+                          legacy=False, cold=True)
+        slow = _solo_json(_mk_trace("mmpp", mix, 3000, seed=3),
+                          legacy=True, cold=True)
+        assert fast == slow
+
+    def test_admission_cap_fallback(self):
+        """Per-tenant admission caps force the chunked loop onto its
+        slow-submit fallback; outputs must still match."""
+        mix = paper_sgemm_mix(6)
+        sched = ScheduleConfig(max_pending_per_tenant=8)
+
+        def run(legacy):
+            trace = _mk_trace("flash", mix, 4000, seed=5)
+            sim = Simulator(schedule=sched, cost_model=RooflineCostModel())
+            if legacy:
+                sim.pump._use_calendar = False
+                trace = _PerEventTrace(trace)
+            return sim.run(trace).to_json()
+
+        assert run(False) == run(True)
+
+
+# ------------------------------------------------------- chunk iterator
+class TestIterChunks:
+    def test_chunks_equal_arrivals(self):
+        """Columnar chunks flatten back to exactly the per-event stream
+        (times, spec identity, cost) for a generated trace."""
+        mix = paper_sgemm_mix(4)
+        trace = _mk_trace("poisson", mix, 5000, seed=1)
+        flat = []
+        for times, idx, costs, table in trace.iter_chunks():
+            assert len(times) == len(idx) == len(costs)
+            for t, i, c in zip(times.tolist(), idx.tolist(), costs.tolist()):
+                flat.append((t, table[i], c))
+        ref = [(a.t_s, a.spec, a.cost) for a in trace]
+        assert len(flat) == len(ref) == 5000
+        assert flat == ref
+
+    def test_replay_csv_roundtrip(self):
+        """The committed smoke CSV rides the generic chunk fallback and
+        produces the same simulation as the per-event path."""
+        assert SMOKE_CSV.is_file()
+        mix = paper_sgemm_mix(4)
+        fast = _solo_json(CsvReplayTrace(mix, str(SMOKE_CSV)), legacy=False)
+        slow = _solo_json(CsvReplayTrace(mix, str(SMOKE_CSV)), legacy=True)
+        assert fast == slow
+        assert json.loads(fast)["summary"]["completed"] == 240
+
+
+# ------------------------------------------------------- ripeness metrics
+class TestRipeNudges:
+    def test_counted_and_reported(self):
+        mix = paper_sgemm_mix(6)
+        sim = Simulator(cost_model=RooflineCostModel())
+        sim.run(_mk_trace("flash", mix, 3000, seed=9))
+        stats = sim.scheduler.stats
+        report = sim.scheduler.report()
+        assert stats.ripe_nudges >= 0
+        assert report["ripe_nudges"] == stats.ripe_nudges
+
+
+# ------------------------------------------------------- sharded fleet
+def _fleet_json(workers, replicas=3, events=4000, seed=2, specs=None,
+                schedule=None):
+    mix = fleet_sgemm_mix(10)
+    rate = 0.7 * replicas * estimate_capacity_hz(mix, RooflineCostModel())
+    trace = PoissonTrace(mix, rate, events, seed=seed)
+    fleet = FleetSimulator(replicas, router="round_robin", workers=workers,
+                           schedule=schedule, specs=specs, compile_s=5e-4)
+    return fleet.run(trace).to_json()
+
+
+class TestShardedFleet:
+    @pytest.mark.parametrize("workers", [2, 3])
+    def test_byte_identical_to_single_process(self, workers):
+        assert _fleet_json(workers) == _fleet_json(1)
+
+    def test_heterogeneous_specs(self):
+        kw = dict(replicas=4, specs=["v5e", "v5e_half"],
+                  schedule=ScheduleConfig(max_pending_per_tenant=32))
+        assert _fleet_json(2, **kw) == _fleet_json(1, **kw)
+
+    def test_more_workers_than_replicas(self):
+        # workers clamp to replica count; still identical
+        assert _fleet_json(8, replicas=2) == _fleet_json(1, replicas=2)
+
+    def test_spec_level_parity(self):
+        base = SystemSpec.from_dict({
+            "mode": "sim",
+            "workload": {"mix": "fleet", "tenants": 10, "process": "mmpp",
+                         "events": 4000, "seed": 4, "rho": 0.7},
+            "fleet": {"replicas": 4},
+            "router": {"policy": "round_robin"},
+            "cost_model": {"compile_us": 500.0},
+            "scheduler": {"batching_policy": "fixed"},
+        })
+        solo = base.build().run_metrics().to_json()
+        sharded = base.replace(**{"fleet.workers": 4}) \
+                      .build().run_metrics().to_json()
+        assert sharded == solo
+
+    def test_rejects_stateful_router(self):
+        mix = fleet_sgemm_mix(4)
+        trace = PoissonTrace(mix, 1000.0, 100, seed=0)
+        fleet = FleetSimulator(2, router="jsq", workers=2)
+        with pytest.raises(ValueError, match="round_robin"):
+            fleet.run(trace)
+
+    def test_spec_validation_rejects_bad_combos(self):
+        base = {
+            "mode": "sim",
+            "workload": {"mix": "fleet", "tenants": 4},
+            "fleet": {"replicas": 2, "workers": 2},
+            "router": {"policy": "round_robin"},
+            "scheduler": {"batching_policy": "fixed"},
+        }
+        SystemSpec.from_dict(base)  # valid
+        bad_router = {**base, "router": {"policy": "jsq"}}
+        with pytest.raises(ValueError, match="round_robin"):
+            SystemSpec.from_dict(bad_router)
+        bad_auto = {**base, "fleet": {"replicas": 2, "workers": 2,
+                                      "autoscale": {"policy": "backlog"}}}
+        with pytest.raises(ValueError, match="autoscale"):
+            SystemSpec.from_dict(bad_auto)
+        bad_sched = {**base,
+                     "scheduler": {"batching_policy": "slo_adaptive"}}
+        with pytest.raises(ValueError, match="fixed"):
+            SystemSpec.from_dict(bad_sched)
+
+
+# --------------------------------------------------- hypothesis (optional)
+def test_equivalence_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        process=st.sampled_from(["poisson", "mmpp", "flash"]),
+        policy=st.sampled_from(["fixed", "slo_adaptive"]),
+        tenants=st.integers(2, 8),
+        seed=st.integers(0, 50),
+    )
+    def prop(process, policy, tenants, seed):
+        mix = paper_sgemm_mix(tenants)
+        fast = _solo_json(_mk_trace(process, mix, 1500, seed=seed),
+                          legacy=False, policy=policy)
+        slow = _solo_json(_mk_trace(process, mix, 1500, seed=seed),
+                          legacy=True, policy=policy)
+        assert fast == slow
+
+    prop()
+
+
+def test_sharded_parity_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        replicas=st.integers(2, 5),
+        workers=st.integers(2, 4),
+        seed=st.integers(0, 20),
+    )
+    def prop(replicas, workers, seed):
+        a = _fleet_json(workers, replicas=replicas, events=1500, seed=seed)
+        b = _fleet_json(1, replicas=replicas, events=1500, seed=seed)
+        assert a == b
+
+    prop()
