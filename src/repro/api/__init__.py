@@ -29,6 +29,7 @@ from repro.api.spec import (  # noqa: F401
     AutoscaleSpec,
     CostModelSpec,
     FleetSpec,
+    ObservabilitySpec,
     RouterSpec,
     SchedulerSpec,
     SystemSpec,

@@ -149,6 +149,59 @@ def build_schedule(spec: SystemSpec) -> Optional[ScheduleConfig]:
     return spec.scheduler.to_schedule_config() if spec.scheduler else None
 
 
+# ------------------------------------------------------------ observability
+def build_recorder(spec: SystemSpec):
+    """A fresh ``FlightRecorder`` when the spec enables observability,
+    else None (the executors thread None through and every hot path pays
+    one is-None test)."""
+    obs = spec.observability
+    if not obs.enabled:
+        return None
+    from repro.obs.recorder import FlightRecorder
+
+    return FlightRecorder(per_request=obs.per_request)
+
+
+def scheduler_counters(m) -> dict:
+    """``SchedulerStats`` surfaced as a diffable dict (the counters
+    ``scheduler.report()`` buries inside the executor)."""
+    return {
+        "busy_time_s": float(m.busy_time_s),
+        "completed": float(m.completed),
+        "dispatches": float(m.dispatches),
+        "evicted_tenants": float(m.evicted_tenants),
+        "rejected": float(m.rejected),
+        "ripe_nudges": float(m.ripe_nudges),
+        "total_cost": float(m.cost.sum()),
+    }
+
+
+def _augment_metrics(spec: SystemSpec, metrics_doc: dict, m,
+                     recorder) -> dict:
+    """Report-layer additions on top of the frozen metrics dict: the
+    scheduler-counter section always, windowed telemetry + trace export
+    when the recorder ran. The metrics dict itself (``to_dict()``) is
+    untouched — recorder-off metrics JSON stays byte-identical to
+    pre-recorder builds."""
+    merged = getattr(m, "merged", m)
+    counters = scheduler_counters(merged)
+    per_rep = getattr(m, "per_replica", None)
+    if per_rep is not None:
+        counters["per_replica_ripe_nudges"] = [
+            float(r.ripe_nudges) for r in per_rep]
+    metrics_doc["scheduler"] = counters
+    if recorder is not None:
+        from repro.obs.telemetry import windowed_series
+        from repro.obs.trace_export import export_chrome_trace
+
+        obs = spec.observability
+        metrics_doc["telemetry"] = windowed_series(recorder, obs.window_s)
+        if obs.trace_path:
+            with open(obs.trace_path, "w") as fh:
+                fh.write(export_chrome_trace(recorder) + "\n")
+    return metrics_doc
+
+
 # ---------------------------------------------------------------- executors
 class SimRun:
     """Solo executor: one replica of the real scheduler on a virtual
@@ -158,6 +211,9 @@ class SimRun:
 
     def __init__(self, spec: SystemSpec):
         self.spec = spec
+        # the flight recorder of the most recent run_metrics() call —
+        # the CLI trace surface exports from it after the run
+        self.last_recorder = None
 
     def run_metrics(self):
         """Fresh assembly, one trace, raw ``SimMetrics``."""
@@ -165,19 +221,27 @@ class SimRun:
         mix = build_mix(spec.workload)
         trace = build_trace(spec, mix)
         model = build_cost_model(spec.cost_model)
-        sim = Simulator(schedule=build_schedule(spec), cost_model=model)
+        rec = build_recorder(spec)
+        sim = Simulator(schedule=build_schedule(spec), cost_model=model,
+                        recorder=rec)
         if spec.cost_model.compile_us > 0.0:
+            # before sim.run(): the recorder attaches lazily there and
+            # its dispatch tap must see the cold-start wrapper
             cold = ColdStartCostModel(
                 model, compile_s=spec.cost_model.compile_us * 1e-6,
                 clock=sim.clock)
             sim.pump.cost_model = cold
             sim.scheduler.cost_model = cold
-        return sim.run(trace)
+        metrics = sim.run(trace)
+        self.last_recorder = rec
+        return metrics
 
     def run(self) -> RunReport:
+        m = self.run_metrics()
+        doc = _augment_metrics(self.spec, m.to_dict(), m,
+                               self.last_recorder)
         return RunReport(executor=self.executor, mode=self.spec.mode,
-                         spec=self.spec.to_dict(),
-                         metrics=self.run_metrics().to_dict())
+                         spec=self.spec.to_dict(), metrics=doc)
 
 
 class FleetRun:
@@ -188,6 +252,7 @@ class FleetRun:
 
     def __init__(self, spec: SystemSpec):
         self.spec = spec
+        self.last_recorder = None
 
     def run_metrics(self):
         """Fresh fleet, one trace, raw ``FleetMetrics``."""
@@ -195,6 +260,7 @@ class FleetRun:
         fleet, cost = spec.fleet, spec.cost_model
         mix = build_mix(spec.workload)
         trace = build_trace(spec, mix)
+        rec = build_recorder(spec)
         sim = FleetSimulator(
             replicas=fleet.replicas,
             router=spec.router.policy,
@@ -205,13 +271,18 @@ class FleetRun:
             strategy=cost.strategy,
             autoscaler=fleet.autoscale.build() if fleet.autoscale else None,
             workers=fleet.workers,
+            recorder=rec,
         )
-        return sim.run(trace)
+        metrics = sim.run(trace)
+        self.last_recorder = rec
+        return metrics
 
     def run(self) -> RunReport:
+        m = self.run_metrics()
+        doc = _augment_metrics(self.spec, m.to_dict(), m,
+                               self.last_recorder)
         return RunReport(executor=self.executor, mode=self.spec.mode,
-                         spec=self.spec.to_dict(),
-                         metrics=self.run_metrics().to_dict())
+                         spec=self.spec.to_dict(), metrics=doc)
 
 
 class LiveRun:
@@ -229,6 +300,7 @@ class LiveRun:
 
     def __init__(self, spec: SystemSpec):
         self.spec = spec
+        self.last_recorder = None
 
     def run(self) -> RunReport:
         import dataclasses as _dc
@@ -260,6 +332,15 @@ class LiveRun:
             seed=w.seed,
             schedule=build_schedule(spec),
         ))
+        rec = build_recorder(spec)
+        if rec is not None:
+            from repro.obs.recorder import dispatch_tap
+
+            shard = rec.shard(0)
+            shard.strategy = engine_mode
+            engine.recorder = shard
+            engine.scheduler.on_dispatch = dispatch_tap(
+                shard, prev=engine.scheduler.on_dispatch)
         rng = np.random.RandomState(w.seed)
         for i in range(w.events):
             engine.submit(InferenceRequest(
@@ -275,10 +356,31 @@ class LiveRun:
         summary = {k: float(v) for k, v in engine.report().items()}
         summary["wall_s"] = wall_s
         summary["requests"] = float(len(engine.finished))
+        st = engine.scheduler.stats
         metrics = {
             "summary": summary,
             "arch": w.arch,
             "engine_mode": engine_mode,
+            # same section shape as the sim executors (``report``
+            # prints it), from the live scheduler's own counters
+            "scheduler": {
+                "busy_time_s": float(st.busy_time_s),
+                "completed": float(st.problems_completed),
+                "dispatches": float(st.dispatches),
+                "rejected": float(st.rejected),
+                "ripe_nudges": float(st.ripe_nudges),
+                "total_cost": float(st.total_cost),
+            },
         }
+        self.last_recorder = rec
+        if rec is not None:
+            from repro.obs.telemetry import windowed_series
+            from repro.obs.trace_export import export_chrome_trace
+
+            obs = spec.observability
+            metrics["telemetry"] = windowed_series(rec, obs.window_s)
+            if obs.trace_path:
+                with open(obs.trace_path, "w") as fh:
+                    fh.write(export_chrome_trace(rec) + "\n")
         return RunReport(executor=self.executor, mode=spec.mode,
                          spec=spec.to_dict(), metrics=metrics)

@@ -7,6 +7,13 @@ Subcommands:
                determinism (--check: run twice, byte-identical metrics)
     sweep      cross-product grid over spec fields (--axis a.b=v1,v2),
                BENCH-style JSON export, --dry-run lists the cells
+    trace      run one spec with the flight recorder forced on and export
+               the Chrome trace_event JSON (open in Perfetto) plus
+               optional windowed telemetry; --check gates byte-identical
+               trace export across a same-seed rerun
+    report     inspect a saved RunReport JSON: the headline summary,
+               scheduler counters, and (--timeline) the windowed
+               telemetry series recorded by an observability-enabled run
     calibrate  fit a CalibratedCostModel from LIVE dispatches of the
                spec's kernel mix and save the table for simulated replay
     check      validate a spec file and print the resolved plan without
@@ -111,6 +118,84 @@ def cmd_simulate(args) -> int:
     if args.out:
         report.save(args.out)
         print(f"wrote {args.out}")
+    return 0
+
+
+# --------------------------------------------------------------------- trace
+def cmd_trace(args) -> int:
+    from repro.obs.trace_export import export_chrome_trace
+
+    extra: Dict[str, object] = {"observability.enabled": True}
+    if args.window is not None:
+        extra["observability.window_s"] = args.window
+    spec = _load_spec(args, extra_sets=extra)
+    if spec.mode == "live":
+        raise SystemExit(
+            "trace drives the simulated executors (live runs can enable "
+            "the recorder via observability.trace_path on the spec); "
+            "set mode='sim'")
+    executor = spec.build()
+    executor.run_metrics()
+    rec = executor.last_recorder
+    text = export_chrome_trace(rec) + "\n"
+    with open(args.out, "w") as fh:
+        fh.write(text)
+    print(f"wrote {args.out} ({rec.total_events()} recorded events) — "
+          f"open it at ui.perfetto.dev or chrome://tracing")
+    if args.telemetry:
+        from repro.obs.telemetry import windowed_series
+
+        series = windowed_series(rec, spec.observability.window_s)
+        with open(args.telemetry, "w") as fh:
+            fh.write(json.dumps(series, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {args.telemetry} ({series['windows']} windows of "
+              f"{spec.observability.window_s * 1e3:g} ms)")
+    if args.check:
+        rerun = spec.build()
+        rerun.run_metrics()
+        identical = export_chrome_trace(rerun.last_recorder) + "\n" == text
+        print(f"same-seed rerun trace byte-identical: {identical}")
+        if not identical:
+            print("CHECK FAILED: rerun trace differs (nondeterminism)",
+                  file=sys.stderr)
+            return 1
+    return 0
+
+
+# -------------------------------------------------------------------- report
+def cmd_report(args) -> int:
+    from repro.api.report import RunReport
+
+    rep = RunReport.load(args.report)
+    _print_summary(rep)
+    sched = rep.metrics.get("scheduler")
+    if isinstance(sched, dict):
+        print("scheduler counters:")
+        for k in sorted(sched):
+            v = sched[k]
+            if isinstance(v, list):
+                print(f"  {k:22s} {v}")
+            else:
+                print(f"  {k:22s} {v:12.4g}")
+    if not args.timeline:
+        return 0
+    t = rep.metrics.get("telemetry")
+    if not isinstance(t, dict) or not t.get("windows"):
+        raise SystemExit(
+            "no telemetry in this report: re-run its spec with "
+            "observability.enabled=true (e.g. `python -m repro simulate "
+            "--spec ... --set observability.enabled=true --out ...`)")
+    w_ms = t["window_s"] * 1e3
+    print(f"timeline: {t['windows']} windows of {w_ms:g} ms "
+          f"(t0 = {t['t0_s']:g} s)")
+    print(f"{'win':>5s} {'arrive':>7s} {'reject':>7s} {'done':>7s} "
+          f"{'p50 ms':>9s} {'p95 ms':>9s} {'attain':>7s} {'backlog':>8s} "
+          f"{'util':>6s}")
+    for k in range(t["windows"]):
+        print(f"{k:5d} {t['arrivals'][k]:7d} {t['rejected'][k]:7d} "
+              f"{t['completed'][k]:7d} {t['p50_ms'][k]:9.3f} "
+              f"{t['p95_ms'][k]:9.3f} {t['slo_attainment'][k]:7.3f} "
+              f"{t['backlog'][k]:8d} {t['utilization'][k]:6.2f}")
     return 0
 
 
@@ -339,6 +424,31 @@ def build_parser() -> argparse.ArgumentParser:
                    help="run twice and fail unless metrics JSON is "
                         "byte-identical (sim determinism gate)")
     p.set_defaults(func=cmd_simulate)
+
+    p = sub.add_parser("trace",
+                       help="run with the flight recorder on, export a "
+                            "Perfetto-loadable Chrome trace")
+    add_spec_args(p)
+    p.add_argument("--out", default="trace.json",
+                   help="write the Chrome trace_event JSON here "
+                        "(default: trace.json)")
+    p.add_argument("--telemetry", default=None,
+                   help="also write the windowed telemetry series JSON here")
+    p.add_argument("--window", type=float, default=None,
+                   help="telemetry window in seconds "
+                        "(override observability.window_s)")
+    p.add_argument("--check", action="store_true",
+                   help="re-run same-seed and fail unless the exported "
+                        "trace is byte-identical")
+    p.set_defaults(func=cmd_trace)
+
+    p = sub.add_parser("report",
+                       help="inspect a saved RunReport (summary, scheduler "
+                            "counters, --timeline telemetry)")
+    p.add_argument("report", help="RunReport JSON file (simulate --out)")
+    p.add_argument("--timeline", action="store_true",
+                   help="print the windowed telemetry table")
+    p.set_defaults(func=cmd_report)
 
     p = sub.add_parser("sweep", help="grid over spec fields")
     add_spec_args(p)

@@ -330,6 +330,39 @@ class CostModelSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObservabilitySpec:
+    """The flight recorder (repro.obs), declaratively. Off by default —
+    recorder-off runs are byte-identical to pre-recorder builds.
+
+    ``window_s`` is the telemetry tick (rolling p50/p95, backlog,
+    utilization, SLO attainment per window) — 1 simulated millisecond by
+    default, sized to the microsecond-scale dispatches the sims model;
+    ``per_request`` adds one request span per completion to the trace
+    (turn off to shrink traces to dispatch granularity on huge runs);
+    ``trace_path``, when set, writes the Chrome ``trace_event`` JSON
+    there after ``run()`` — loadable in Perfetto (ui.perfetto.dev) or
+    ``chrome://tracing``.
+    """
+
+    enabled: bool = False
+    window_s: float = 0.001
+    per_request: bool = True
+    trace_path: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.window_s <= 0:
+            raise ValueError(
+                f"observability.window_s must be > 0, got {self.window_s}")
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "ObservabilitySpec":
+        return _from_dict(cls, data, "observability")
+
+
+@dataclasses.dataclass(frozen=True)
 class SystemSpec:
     """The complete declarative experiment (see module docstring)."""
 
@@ -341,6 +374,8 @@ class SystemSpec:
     # engine-derived greedy schedule for live runs)
     scheduler: Optional[SchedulerSpec] = None
     cost_model: CostModelSpec = dataclasses.field(default_factory=CostModelSpec)
+    observability: ObservabilitySpec = dataclasses.field(
+        default_factory=ObservabilitySpec)
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
@@ -387,6 +422,7 @@ class SystemSpec:
             "router": self.router.to_dict(),
             "scheduler": self.scheduler.to_dict() if self.scheduler else None,
             "cost_model": self.cost_model.to_dict(),
+            "observability": self.observability.to_dict(),
         }
 
     @classmethod
@@ -409,6 +445,7 @@ class SystemSpec:
             "router": RouterSpec.from_dict,
             "scheduler": SchedulerSpec.from_dict,
             "cost_model": CostModelSpec.from_dict,
+            "observability": ObservabilitySpec.from_dict,
         }
         for key, conv in converters.items():
             if isinstance(data.get(key), dict):

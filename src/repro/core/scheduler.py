@@ -204,8 +204,6 @@ class DynamicSpaceTimeScheduler:
         stats.problems_completed += len(batch)
         stats.total_cost += sum([float(getattr(p, "cost", 0.0)) for p in batch])
         stats.busy_time_s += t1 - t0
-        if self.on_dispatch is not None:
-            self.on_dispatch(batch, t1 - t0, self.replica_id)
 
         if outs is None:
             # executor contract: None means "no per-item results" (the
@@ -216,6 +214,10 @@ class DynamicSpaceTimeScheduler:
             for p, out in zip(batch, outs):
                 p.result = out
                 p.completion_time = t1
+        # tap fires after completion stamping so observers can read
+        # batch[*].completion_time (== t1) as the dispatch-end instant
+        if self.on_dispatch is not None:
+            self.on_dispatch(batch, t1 - t0, self.replica_id)
         self.monitor.record_batch(batch, t1)
 
         self._evict_stragglers()

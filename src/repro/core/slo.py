@@ -10,6 +10,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import statistics
+from bisect import bisect_left, insort
 from typing import Deque, Dict, List, Optional
 
 
@@ -19,17 +20,6 @@ class TenantLatency:
     count: int = 0
     slo_violations: int = 0
     history: List[float] = dataclasses.field(default_factory=list)
-
-    def record(self, latency_s: float, slo_s: float, alpha: float) -> None:
-        self.count += 1
-        if latency_s > slo_s:
-            self.slo_violations += 1
-        self.ewma_s = (
-            latency_s
-            if self.ewma_s is None
-            else alpha * latency_s + (1 - alpha) * self.ewma_s
-        )
-        self.history.append(latency_s)
 
     def percentile(self, q: float) -> float:
         if not self.history:
@@ -64,6 +54,12 @@ class LatencyMonitor:
         self.alpha = ewma_alpha
         self.eviction_ratio = eviction_ratio
         self.tenants: Dict[int, TenantLatency] = {}
+        # every non-None tenant EWMA, kept sorted incrementally (one
+        # bisect-delete + insort per update) so straggler detection after
+        # each dispatch is O(log T) instead of a full re-sort — the fleet
+        # sim's former per-dispatch fixed cost. All EWMA updates MUST go
+        # through record/record_batch to keep this in sync.
+        self._ewma_sorted: List[float] = []
         self.by_kind: Dict[str, Deque[float]] = {}
         # False = keep only the signals the scheduler acts on (EWMA,
         # counts, violations) and skip the per-item history lists. The
@@ -81,11 +77,14 @@ class LatencyMonitor:
         t.count += 1
         if latency_s > slo_s:
             t.slo_violations += 1
-        t.ewma_s = (
-            latency_s
-            if t.ewma_s is None
-            else self.alpha * latency_s + (1 - self.alpha) * t.ewma_s
-        )
+        srt = self._ewma_sorted
+        old = t.ewma_s
+        if old is None:
+            t.ewma_s = latency_s
+        else:
+            t.ewma_s = self.alpha * latency_s + (1 - self.alpha) * old
+            del srt[bisect_left(srt, old)]
+        insort(srt, t.ewma_s)
         if self.record_history:
             t.history.append(latency_s)
             self.by_kind.setdefault(
@@ -102,20 +101,30 @@ class LatencyMonitor:
         alpha = self.alpha
         one_minus = 1 - alpha
         tenants = self.tenants
+        srt = self._ewma_sorted
         keep_history = self.record_history
         by_kind = self.by_kind
+        # sorted-list fixups are deferred to once per distinct tenant per
+        # batch: only each tenant's final EWMA survives the batch, so the
+        # resulting list is identical to per-item maintenance
+        before: Dict[int, Optional[float]] = {}
         for p in items:
             latency_s = completion_s - p.arrival_time
-            t = tenants.get(p.tenant_id)
+            tid = p.tenant_id
+            t = tenants.get(tid)
             if t is None:
                 t = TenantLatency()
-                tenants[p.tenant_id] = t
+                tenants[tid] = t
             t.count += 1
             if latency_s > p.slo_s:
                 t.slo_violations += 1
             e = t.ewma_s
-            t.ewma_s = latency_s if e is None \
-                else alpha * latency_s + one_minus * e
+            if tid not in before:
+                before[tid] = e
+            if e is None:
+                t.ewma_s = latency_s
+            else:
+                t.ewma_s = alpha * latency_s + one_minus * e
             if keep_history:
                 t.history.append(latency_s)
                 kind = getattr(p, "kind", "default")
@@ -124,6 +133,10 @@ class LatencyMonitor:
                     d = collections.deque(maxlen=self.KIND_HISTORY_MAX)
                     by_kind[kind] = d
                 d.append(latency_s)
+        for tid, old in before.items():
+            if old is not None:
+                del srt[bisect_left(srt, old)]
+            insort(srt, tenants[tid].ewma_s)
 
     def slo_attainment(self, tenant_id: int) -> float:
         """Per-tenant SLO attainment (1.0 for unknown tenants)."""
@@ -131,8 +144,15 @@ class LatencyMonitor:
         return t.attainment if t is not None else 1.0
 
     def cohort_median_ewma(self) -> Optional[float]:
-        vals = [t.ewma_s for t in self.tenants.values() if t.ewma_s is not None]
-        return statistics.median(vals) if vals else None
+        # read off the incrementally-maintained sorted list; the even-n
+        # arithmetic matches statistics.median exactly (byte-identical
+        # eviction decisions vs the old per-call re-sort)
+        srt = self._ewma_sorted
+        n = len(srt)
+        if n == 0:
+            return None
+        mid = n // 2
+        return srt[mid] if n % 2 else (srt[mid - 1] + srt[mid]) / 2
 
     def stragglers(self) -> List[int]:
         """Tenants whose EWMA latency exceeds eviction_ratio x cohort median.
@@ -144,10 +164,14 @@ class LatencyMonitor:
         med = self.cohort_median_ewma()
         if med is None or med == 0.0:
             return []
+        cut = self.eviction_ratio * med
+        if self._ewma_sorted[-1] <= cut:
+            # common case — no tenant above the cut; O(1) per dispatch
+            return []
         return [
             tid
             for tid, t in self.tenants.items()
-            if t.ewma_s is not None and t.ewma_s > self.eviction_ratio * med
+            if t.ewma_s is not None and t.ewma_s > cut
         ]
 
     # ------------------------------------------------------------ metrics

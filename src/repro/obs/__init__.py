@@ -1,0 +1,29 @@
+"""Flight recorder: structured event tracing for scheduler, routers, fleet.
+
+The observability substrate (see ``repro.obs.recorder``): a
+zero-overhead-when-off columnar event store capturing every decision
+point — arrivals/admissions, dispatch spans, router price vectors,
+autoscale events — with three read paths: Chrome ``trace_event`` JSON
+(``repro.obs.trace_export``, Perfetto-viewable timelines), windowed
+time-series telemetry (``repro.obs.telemetry``), and the
+``python -m repro trace`` / ``report --timeline`` CLI surface.
+"""
+
+from repro.obs.recorder import (
+    FlightRecorder,
+    ReplicaShard,
+    dispatch_tap,
+    route_price_vector,
+)
+from repro.obs.telemetry import windowed_series
+from repro.obs.trace_export import chrome_trace_events, export_chrome_trace
+
+__all__ = [
+    "FlightRecorder",
+    "ReplicaShard",
+    "chrome_trace_events",
+    "dispatch_tap",
+    "export_chrome_trace",
+    "route_price_vector",
+    "windowed_series",
+]

@@ -63,6 +63,7 @@ from repro.sim.costmodel import (
     estimate_capacity_hz,
     resolve_spec,
 )
+from repro.obs.recorder import route_price_vector
 from repro.sim.metrics import FleetMetrics, MetricsAccumulator
 from repro.sim.router import Router, make_router
 from repro.sim.simulator import ReplicaPump, SimWorkload
@@ -149,6 +150,7 @@ class FleetSimulator:
         autoscaler: Optional[Union[Autoscaler, str]] = None,
         calibration: Optional[FleetCalibrator] = None,
         workers: int = 1,
+        recorder=None,
     ):
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
@@ -170,6 +172,9 @@ class FleetSimulator:
         self.autoscaler = (make_autoscaler(autoscaler)
                            if isinstance(autoscaler, str) else autoscaler)
         self.calibration = calibration
+        # optional FlightRecorder (repro.obs); set before the initial
+        # spawn loop so every replica — initial or autoscaled — attaches
+        self.recorder = recorder
 
         self.pumps: List[ReplicaPump] = []       # every replica ever live
         self.active: List[ReplicaPump] = []      # currently routable
@@ -214,6 +219,9 @@ class FleetSimulator:
         if self.calibration is not None:
             pump.scheduler.on_dispatch = self._calibration_tap(model)
             pump.route_model = self.calibration.for_replica(i)
+        if self.recorder is not None:
+            # after calibration wiring: the recorder tap composes over it
+            pump.attach_recorder(self.recorder.shard(i))
         acc = MetricsAccumulator()
         pump.accs = [self._fleet_acc, acc]
         self.pumps.append(pump)
@@ -297,6 +305,7 @@ class FleetSimulator:
             from repro.sim.shard import run_sharded
             return run_sharded(self, trace)
         router, scaler = self.router, self.autoscaler
+        rec = self.recorder
         t_start = self.start_s
         next_tick = t_start + scaler.interval_s if scaler is not None else None
 
@@ -308,6 +317,14 @@ class FleetSimulator:
             self._drain_until(t_s)
             idx = router.route(spec, self.active, t_s)
             pump = self.active[idx]
+            if rec is not None:
+                # recompute the (idempotent) price vector the router just
+                # read — recorded before submit so the decision context is
+                # the pre-admission state it was actually made against
+                rids, prices = route_price_vector(
+                    router, spec, self.active, t_s)
+                rec.record_route(t_s, spec.tenant_id, pump.replica_id,
+                                 rids, prices)
             w = SimWorkload(spec, cost)
             w.est_s = pump.estimate_item_s(w)
             if pump.submit(w, t_s):
@@ -334,6 +351,9 @@ class FleetSimulator:
         horizon = max((p.clock.now() for p in pumps
                        if p.scheduler.stats.dispatches > 0),
                       default=t_start) - t_start
+        if rec is not None:
+            rec.router_name = self.router.name
+            rec.record_scale_events(self.scale_events)
         merged = self._freeze_merged(self._fleet_acc, horizon)
         per_replica = [p.freeze(acc, sim_duration_s=horizon)
                        for p, acc in zip(pumps, self._replica_accs)]
@@ -360,6 +380,7 @@ class FleetSimulator:
             dispatches=sum(s.dispatches for s in stats),
             rejected=sum(s.rejected for s in stats),
             evicted_tenants=sum(len(p.scheduler.evicted) for p in self.pumps),
+            ripe_nudges=sum(s.ripe_nudges for s in stats),
         )
 
     def _cold_series(self):

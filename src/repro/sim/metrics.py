@@ -83,7 +83,8 @@ class MetricsAccumulator:
 
     def freeze(self, sim_duration_s: float, busy_time_s: float,
                dispatches: int, rejected: int = 0,
-               evicted_tenants: int = 0) -> "SimMetrics":
+               evicted_tenants: int = 0,
+               ripe_nudges: int = 0) -> "SimMetrics":
         return SimMetrics(
             lat=np.asarray(self._lat, np.float64),
             slo=np.asarray(self._slo, np.float64),
@@ -96,6 +97,7 @@ class MetricsAccumulator:
             dispatches=int(dispatches),
             rejected=int(rejected),
             evicted_tenants=int(evicted_tenants),
+            ripe_nudges=int(ripe_nudges),
         )
 
 
@@ -112,7 +114,7 @@ class SimMetrics:
 
     def __init__(self, lat, slo, cost, tenant, kind_idx, kinds,
                  sim_duration_s, busy_time_s, dispatches,
-                 rejected=0, evicted_tenants=0):
+                 rejected=0, evicted_tenants=0, ripe_nudges=0):
         self.lat = lat
         self.slo = slo
         self.cost = cost
@@ -124,6 +126,10 @@ class SimMetrics:
         self.dispatches = dispatches
         self.rejected = rejected
         self.evicted_tenants = evicted_tenants
+        # scheduler drift counter, surfaced in bench rows and RunReport's
+        # "scheduler" section but deliberately NOT in summary()/to_dict():
+        # the metrics JSON layout (SCHEMA_VERSION 1) stays byte-identical
+        self.ripe_nudges = ripe_nudges
         self._met = lat <= slo if lat.size else np.zeros(0, bool)
 
     # ------------------------------------------------------------- headline
@@ -209,6 +215,8 @@ class SimMetrics:
             (f"{prefix}/goodput", s["goodput_cost_per_s"],
              "cost_units_per_s_slo_met"),
             (f"{prefix}/utilization", s["utilization"] * 100.0, "pct busy"),
+            (f"{prefix}/ripe_nudges", float(self.ripe_nudges),
+             "count (ungated)"),
         ]
 
     def to_dict(self) -> Dict:
@@ -275,6 +283,11 @@ class FleetMetrics:
     def replicas(self) -> int:
         """Replicas that were ever live (autoscaled fleets: spawned)."""
         return len(self.per_replica)
+
+    @property
+    def ripe_nudges(self) -> int:
+        """Fleet-wide scheduler drift counter (sum over replicas)."""
+        return self.merged.ripe_nudges
 
     @property
     def initial_replicas(self) -> int:
@@ -371,6 +384,8 @@ class FleetMetrics:
              "pct busy (mean over replicas)"),
         ]
         rows.extend([
+            (f"{prefix}/ripe_nudges", float(self.ripe_nudges),
+             "count (ungated)"),
             (f"{prefix}/routing_imbalance", self.routing_imbalance,
              "cv routed counts"),
             (f"{prefix}/utilization_spread", self.utilization_spread * 100.0,

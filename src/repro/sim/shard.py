@@ -123,6 +123,10 @@ def _run_replica(pump, rid: int, trace: Trace, n_replicas: int) -> Dict:
     acc = MetricsAccumulator()
     pump.accs = [acc]
     events: List[Tuple[float, int, int, int]] = []  # (t, phase, tiebreak, n)
+    # (j, t, tenant) per owned arrival when recording — the merge replays
+    # these in global arrival order to rebuild the fleet route timeline
+    routes: List[Tuple[int, float, int]] = []
+    recording = pump.recorder is not None
     routed = 0
     next_ripe = pump.next_ripe_time
     pump_at = pump.pump_at
@@ -130,6 +134,8 @@ def _run_replica(pump, rid: int, trace: Trace, n_replicas: int) -> Dict:
     estimate = pump.estimate_item_s
 
     for j, t, spec, cost in _owned_arrivals(trace, rid, n_replicas):
+        if recording:
+            routes.append((j, t, spec.tenant_id))
         while True:
             tau = next_ripe()
             if tau is None or tau >= t:
@@ -181,6 +187,9 @@ def _run_replica(pump, rid: int, trace: Trace, n_replicas: int) -> Dict:
         "spec_name": pump.spec_name,
         "cold_times": cold_times,
         "cold_flags": cold_flags,
+        "ripe_nudges": stats.ripe_nudges,
+        "obs": pump.recorder.payload() if recording else None,
+        "routes": routes,
     }
 
 
@@ -238,7 +247,8 @@ def _merge(fleet, shards: List[Dict], t_start: float) -> FleetMetrics:
         per_replica.append(acc.freeze(
             sim_duration_s=horizon, busy_time_s=s["busy"],
             dispatches=s["dispatches"], rejected=s["rejected"],
-            evicted_tenants=s["evicted"]))
+            evicted_tenants=s["evicted"],
+            ripe_nudges=s["ripe_nudges"]))
 
     merged = MetricsAccumulator()
     mkinds = merged._kinds
@@ -284,7 +294,11 @@ def _merge(fleet, shards: List[Dict], t_start: float) -> FleetMetrics:
         dispatches=sum(s["dispatches"] for s in shards),
         rejected=sum(s["rejected"] for s in shards),
         evicted_tenants=sum(s["evicted"] for s in shards),
+        ripe_nudges=sum(s["ripe_nudges"] for s in shards),
     )
+
+    if fleet.recorder is not None:
+        _merge_recording(fleet.recorder, fleet.router.name, shards)
 
     times = [np.asarray(s["cold_times"], np.float64) for s in shards
              if s["cold_times"] is not None]
@@ -312,6 +326,28 @@ def _merge(fleet, shards: List[Dict], t_start: float) -> FleetMetrics:
         replica_specs=[s["spec_name"] for s in shards],
         final_active=len(shards),
     )
+
+
+def _merge_recording(rec, router_name: str, shards: List[Dict]) -> None:
+    """Reassemble the fleet's flight recording from worker payloads:
+    per-replica shards verbatim (their trajectories are identical to the
+    single-process run), fleet-level route rows replayed in global
+    arrival order. Round-robin routing records empty price vectors by
+    design, so the replay is byte-equal to live recording; scale events
+    cannot occur (sharding forbids autoscaling)."""
+    from repro.obs.recorder import ReplicaShard
+
+    for s in shards:
+        if s["obs"] is not None:
+            rec.shards[s["rid"]] = ReplicaShard.from_payload(s["obs"])
+    all_routes: List[Tuple[int, float, int, int]] = []
+    for s in shards:
+        all_routes.extend((j, t, tenant, s["rid"])
+                          for (j, t, tenant) in s["routes"])
+    all_routes.sort(key=lambda r: r[0])
+    for _, t, tenant, rid in all_routes:
+        rec.record_route(t, tenant, rid)
+    rec.router_name = router_name
 
 
 def run_sharded(fleet, trace) -> FleetMetrics:

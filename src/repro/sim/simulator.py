@@ -144,6 +144,9 @@ class ReplicaPump:
         # million-event trace must not accumulate a million floats.
         self.track_inflight = False
         self._inflight: deque = deque()
+        # flight-recorder shard (repro.obs); None = recording off, and the
+        # hot paths pay exactly one is-None test per arrival
+        self.recorder = None
         # ---- ripeness calendar (stable-window policies only) ----
         # _ripe_at maps bucket -> its current ripeness instant
         # (oldest_arrival + window; -inf for cap-full buckets, matching
@@ -169,6 +172,9 @@ class ReplicaPump:
         """
         self.clock.advance_to(t_s)
         admitted = self.scheduler.submit(w, now=t_s)
+        rec = self.recorder
+        if rec is not None:
+            rec.record_arrival(t_s, w.tenant_id, w.bucket, admitted)
         if admitted:
             self.pending_est_s += w.est_s
             if self._use_calendar:
@@ -369,6 +375,25 @@ class ReplicaPump:
             return estimate((w,))
         return model((w,))
 
+    # -------------------------------------------------------- observability
+    def attach_recorder(self, shard) -> None:
+        """Record this replica's events into a flight-recorder shard:
+        arrivals via ``submit`` (and the chunked intake), dispatch spans
+        via an ``on_dispatch`` tap composed OVER any existing tap
+        (calibration keeps working underneath). Must run after the final
+        cost model is in place — the tap captures its ``dispatch_cold``
+        array for cold/warm labeling."""
+        from repro.obs.recorder import dispatch_tap
+
+        self.recorder = shard
+        shard.spec_name = self.spec_name
+        model = self.cost_model
+        base = getattr(model, "base", model)
+        shard.strategy = getattr(base, "strategy", None) or getattr(
+            getattr(base, "prior", None), "strategy", None)
+        self.scheduler.on_dispatch = dispatch_tap(
+            shard, model=model, prev=self.scheduler.on_dispatch)
+
     def freeze(self, acc: MetricsAccumulator,
                sim_duration_s: float) -> SimMetrics:
         """Freeze one accumulator against this replica's scheduler stats."""
@@ -379,6 +404,7 @@ class ReplicaPump:
             dispatches=sched.stats.dispatches,
             rejected=sched.stats.rejected,
             evicted_tenants=len(sched.evicted),
+            ripe_nudges=sched.stats.ripe_nudges,
         )
 
 
@@ -390,14 +416,21 @@ class Simulator:
         schedule: Optional[ScheduleConfig] = None,
         cost_model: Optional[Callable[[Sequence], float]] = None,
         start_s: float = 0.0,
+        recorder=None,
     ):
         self.pump = ReplicaPump(schedule=schedule, cost_model=cost_model,
                                 start_s=start_s)
         self.clock = self.pump.clock
         self.scheduler = self.pump.scheduler
+        self._recorder = recorder
 
     def run(self, trace: Trace | Iterable[Arrival]) -> SimMetrics:
         pump = self.pump
+        # attach lazily: callers (repro.api) may swap the cost model in
+        # after construction, and the dispatch tap must capture the final
+        # (cold-start-wrapped) model
+        if self._recorder is not None and pump.recorder is None:
+            pump.attach_recorder(self._recorder.shard(0))
         acc = MetricsAccumulator()
         pump.accs = [acc]
         t_start = pump.clock.now()
@@ -442,6 +475,10 @@ class Simulator:
 
         capped = sched.schedule.max_pending_per_tenant is not None
         submit_slow = pump.submit
+        # recorder hook hoisted out of the loop: recorder-off chunked
+        # intake pays zero per-event cost for observability
+        rec = pump.recorder
+        rec_arr = rec.record_arrival if rec is not None else None
 
         cval = clock.now()            # tracks the real (virtual) clock
         m = ripe_min()
@@ -472,6 +509,8 @@ class Simulator:
                     continue
                 w.arrival_time = t
                 depth = queue_push(w)
+                if rec_arr is not None:
+                    rec_arr(t, w.tenant_id, w.bucket, True)
                 if depth >= pump._cap or depth == 1:
                     cal_note_push(w.bucket, t, depth)
                     v = pump._ripe_at[w.bucket]
