@@ -9,7 +9,8 @@ PR, while a >10% tail-latency or goodput regression fails CI.
 Direction-aware: a row regresses only in its bad direction —
 
     lower is better    .../p50  .../p95  .../p99        (latency)
-    higher is better   .../attainment  .../goodput  .../events_per_s
+    higher is better   .../attainment  .../slo_attainment  .../goodput
+                       .../events_per_s
 
 Everything else (utilization, imbalance, cold fraction, spread, ...) is
 informational: tracked in the JSON, never gated — those metrics trade
@@ -38,7 +39,8 @@ import sys
 from typing import Dict, List, Tuple
 
 LOWER_BETTER = ("/p50", "/p95", "/p99")
-HIGHER_BETTER = ("/attainment", "/goodput", "/events_per_s")
+HIGHER_BETTER = ("/attainment", "/slo_attainment", "/goodput",
+                 "/events_per_s")
 
 # below this, a metric is noise-floor: relative comparison of two nearly
 # zero values (e.g. 0.0001% attainment) would gate on float dust
@@ -77,11 +79,14 @@ def compare(baseline: Dict[str, float], current: Dict[str, float],
         denom = max(abs(base), ABS_FLOOR)
         delta = (cur - base) / denom
         if sign * delta < -tolerance:
-            kind = "worse" if sign > 0 else "slower"
+            # one self-contained line per failure: metric path, baseline,
+            # observed, direction — actionable straight from the CI log,
+            # no artifact download needed
+            direction = "higher is better" if sign > 0 else "lower is better"
             problems.append(
-                f"{name}: {base:.6g} -> {cur:.6g} "
-                f"({delta * 100.0:+.1f}%, {kind} by more than "
-                f"{tolerance * 100.0:.0f}%)")
+                f"{name}: baseline={base:.6g} observed={cur:.6g} "
+                f"({delta * 100.0:+.1f}%, {direction}, exceeds "
+                f"{tolerance * 100.0:.0f}% tolerance)")
     return problems, gated
 
 

@@ -1,0 +1,221 @@
+"""Deadline-scheduling sweep: EDF vs fixed vs slo_adaptive under overload.
+
+Every cell is a ``SystemSpec`` over the serving mix (per-tenant prefill +
+decode streams with tiered SLOs) driven at an overload ``rho`` through
+two bursty arrival processes (MMPP regime-switching and a flash crowd).
+The EDF cells run the full deadline stack: earliest-deadline-first bucket
+ordering, feasibility admission priced via the roofline cost model with
+bounded oversubscription — the DARIS-style "admit late work only up to a
+priced lateness budget" policy the fixed pending cap cannot express.
+
+A separate preemption pair (same seed, preemption off/on) shows the
+ahead-of-window force-dispatch rescuing decode deadlines that the
+batching window alone would miss, bounded by the per-tenant interference
+budget — and, with the flight recorder enabled, every admission /
+oversubscription / preemption decision lands in the Perfetto-loadable
+trace, which is where "why did this deadline miss" gets answered.
+
+``--check`` (the CI ``deadline-gate``) asserts:
+
+  1. EDF SLO attainment >= slo_adaptive and >= fixed on the MMPP
+     overload mix (the tentpole ordering);
+  2. same-seed reruns are byte-identical — metrics JSON AND the exported
+     Chrome trace bytes;
+  3. recorder-on metrics JSON == recorder-off metrics JSON (observability
+     never perturbs the timeline);
+  4. the preemption cell actually preempts, within budget, and does not
+     lose attainment vs preemption-off.
+
+The committed baseline is refreshed with the SAME arguments CI uses:
+
+    PYTHONPATH=src python benchmarks/deadline_sweep.py --events 120000 \
+        --json benchmarks/baselines/BENCH_baseline_deadline_sweep.json
+
+    PYTHONPATH=src python benchmarks/deadline_sweep.py --events 1000000
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.api import SchedulerSpec, SystemSpec, WorkloadSpec
+from repro.sim import SimMetrics, to_bench_json
+
+PROCESSES = ("mmpp", "flash")
+POLICIES = ("fixed", "slo_adaptive", "edf")
+
+# the EDF stack every edf cell runs (feasibility admission + bounded
+# oversubscription); fixed/slo_adaptive keep the blind cap default
+EDF_OVERRIDES = {
+    "scheduler.batching_policy": "edf",
+    "scheduler.admission_policy": "feasibility",
+    "scheduler.oversubscription": 1.25,
+}
+
+# preemption pair: a batching window wide enough that a decode cohort
+# waiting it out misses its 20ms SLO, so only the ahead-of-window
+# force-dispatch can save it (lead 0 => items ripen a full window after
+# arrival, the worst case for tight deadlines)
+PREEMPT_OVERRIDES = {
+    "scheduler.batching_policy": "edf",
+    "scheduler.batching_window_s": 0.017,
+    "scheduler.deadline_lead_fraction": 0.0,
+    "scheduler.preemption_budget_s": 0.050,
+}
+
+
+def _spec(events: int, tenants: int, seed: int, rho: float) -> SystemSpec:
+    return SystemSpec(
+        workload=WorkloadSpec(mix="serving", tenants=tenants, process="mmpp",
+                              events=events, seed=seed, rho=rho),
+        scheduler=SchedulerSpec(batching_window_s=0.002,
+                                max_superkernel_size=64),
+    )
+
+
+def run(events: int = 1_000_000, tenants: int = 6, seed: int = 0,
+        rho: float = 1.15, check: bool = False,
+        json_path: Optional[str] = None) -> Dict[str, SimMetrics]:
+    t_wall = time.perf_counter()
+    base = _spec(events, tenants, seed, rho)
+    sections: Dict[str, SimMetrics] = {}
+    failures: List[str] = []
+
+    print(f"\n=== deadline_sweep: {events} events/cell, serving mix, "
+          f"tenants={tenants}, rho={rho}, seed={seed} ===")
+    attain: Dict[str, Dict[str, float]] = {}
+    for process in PROCESSES:
+        print(f"\n--- {process} overload: policy comparison ---")
+        print(f"{'policy':13s} {'attain':>7s} {'p95 ms':>10s} {'goodput':>11s} "
+              f"{'rejected':>9s} {'dl_rej':>7s} {'oversub':>8s}")
+        attain[process] = {}
+        for policy in POLICIES:
+            overrides = {"workload.process": process}
+            if policy == "edf":
+                overrides.update(EDF_OVERRIDES)
+            else:
+                overrides["scheduler.batching_policy"] = policy
+            m = base.replace(**overrides).build().run_metrics()
+            s = m.summary()
+            attain[process][policy] = s["slo_attainment"]
+            sections[f"{process}_{policy}"] = m
+            print(f"{policy:13s} {s['slo_attainment']:7.4f} "
+                  f"{s['p95_s']*1e3:10.3f} {s['goodput_cost_per_s']:11.4g} "
+                  f"{s['rejected']:9.0f} {m.deadline_rejected:7d} "
+                  f"{m.oversubscribed:8d}")
+        a = attain[process]
+        print(f"edf >= slo_adaptive: {a['edf'] >= a['slo_adaptive']}   "
+              f"edf >= fixed: {a['edf'] >= a['fixed']}")
+
+    # the tentpole ordering is gated on the MMPP mix; flash is tracked in
+    # the baseline rows (10% gate) but not hard-ordered — a flash crowd
+    # can overwhelm every policy equally at high enough rho
+    a = attain["mmpp"]
+    if a["edf"] < a["slo_adaptive"] or a["edf"] < a["fixed"]:
+        failures.append(
+            f"EDF attainment ordering violated on mmpp: edf={a['edf']:.4f} "
+            f"slo_adaptive={a['slo_adaptive']:.4f} fixed={a['fixed']:.4f}")
+
+    # ------------------------------------------------------ preemption pair
+    pre_events = max(events // 4, 1000)
+    pre_base = base.replace(**{"workload.events": pre_events,
+                               "workload.seed": seed + 1,
+                               "workload.rho": 0.9})
+    print(f"\n--- preemption (17ms window vs 20ms decode SLO, "
+          f"{pre_events} events) ---")
+    pre: Dict[bool, SimMetrics] = {}
+    for on in (False, True):
+        overrides = dict(PREEMPT_OVERRIDES)
+        overrides["scheduler.preemption"] = on
+        m = pre_base.replace(**overrides).build().run_metrics()
+        pre[on] = m
+        sections[f"preempt_{'on' if on else 'off'}"] = m
+        s = m.summary()
+        print(f"preemption={'on ' if on else 'off'}: "
+              f"attainment={s['slo_attainment']:.4f} "
+              f"p95={s['p95_s']*1e3:.3f}ms preemptions={m.preemptions}")
+    if pre[True].preemptions <= 0:
+        failures.append("preemption cell recorded zero preemptions")
+    if pre[True].slo_attainment < pre[False].slo_attainment:
+        failures.append(
+            f"preemption lost attainment: on={pre[True].slo_attainment:.4f} "
+            f"< off={pre[False].slo_attainment:.4f}")
+
+    # ------------------------------------------- determinism + recorder-off
+    # headline EDF cell: same-seed rerun must be byte-identical, recorder-on
+    # must not perturb the metrics, and two recorder-on runs must export
+    # byte-identical Chrome trace JSON (admission/preemption events and all)
+    headline = base.replace(**{"workload.process": "mmpp", **EDF_OVERRIDES})
+    rerun = headline.build().run_metrics()
+    if rerun.to_json() != sections["mmpp_edf"].to_json():
+        failures.append("same-seed rerun of mmpp_edf not byte-identical")
+    from repro.obs.trace_export import export_chrome_trace
+
+    traced = headline.replace(**{"observability.enabled": True})
+    runs = []
+    for _ in range(2):
+        r = traced.build()
+        m = r.run_metrics()
+        runs.append((m, export_chrome_trace(r.last_recorder)))
+    if runs[0][0].to_json() != sections["mmpp_edf"].to_json():
+        failures.append("recorder-on metrics differ from recorder-off")
+    if runs[0][1] != runs[1][1]:
+        failures.append("same-seed recorder trace bytes not identical")
+    n_pre_events = runs[0][0].preemptions
+    print(f"\ndeterminism: rerun byte-identical, trace "
+          f"{len(runs[0][1])} bytes stable, recorder-off == recorder-on "
+          f"(headline preemptions={n_pre_events})")
+
+    # ---------------------------------------------------------------- output
+    if json_path:
+        doc = json.loads(to_bench_json(
+            "deadline_sweep", sections,
+            extra={"events": events, "tenants": tenants, "seed": seed,
+                   "rho": rho}))
+        # the gated trajectory rows: raw attainment fraction per cell under
+        # the /slo_attainment suffix (HIGHER_BETTER in check_regression)
+        for name in sorted(sections):
+            doc["rows"].append({
+                "name": f"deadline_sweep/{name}/slo_attainment",
+                "us_per_call": sections[name].slo_attainment,
+                "derived": "fraction SLO met (gated, higher is better)",
+            })
+        with open(json_path, "w") as fh:
+            fh.write(json.dumps(doc, indent=2, sort_keys=True))
+        print(f"wrote {json_path}")
+
+    print(f"\ntotal wall time: {time.perf_counter() - t_wall:.1f}s")
+    if failures:
+        for f in failures:
+            print(f"CHECK FAILED: {f}", file=sys.stderr)
+        if check:
+            sys.exit(1)
+    elif check:
+        print("checks passed: EDF >= slo_adaptive/fixed attainment on mmpp; "
+              "preemption fires and does not regress; reruns byte-identical "
+              "including recorder trace bytes")
+    return sections
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--events", type=int, default=1_000_000,
+                    help="arrivals per policy cell (preemption pair runs 1/4)")
+    ap.add_argument("--tenants", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rho", type=float, default=1.15,
+                    help="offered load / estimated capacity (overload > 1)")
+    ap.add_argument("--json", default=None, help="write BENCH-style JSON here")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the deadline orderings hold")
+    args = ap.parse_args()
+    run(events=args.events, tenants=args.tenants, seed=args.seed,
+        rho=args.rho, check=args.check, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

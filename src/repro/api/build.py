@@ -172,6 +172,9 @@ def scheduler_counters(m) -> dict:
         "evicted_tenants": float(m.evicted_tenants),
         "rejected": float(m.rejected),
         "ripe_nudges": float(m.ripe_nudges),
+        "deadline_rejected": float(m.deadline_rejected),
+        "oversubscribed": float(m.oversubscribed),
+        "preemptions": float(m.preemptions),
         "total_cost": float(m.cost.sum()),
     }
 
@@ -369,6 +372,9 @@ class LiveRun:
                 "dispatches": float(st.dispatches),
                 "rejected": float(st.rejected),
                 "ripe_nudges": float(st.ripe_nudges),
+                "deadline_rejected": float(st.deadline_rejected),
+                "oversubscribed": float(st.oversubscribed),
+                "preemptions": float(st.preemptions),
                 "total_cost": float(st.total_cost),
             },
         }

@@ -260,6 +260,11 @@ class SchedulerSpec:
     min_batching_window_s: float = 0.0
     slo_slack_fraction: float = 0.25
     max_pending_per_tenant: Optional[int] = None
+    admission_policy: str = "cap"
+    oversubscription: float = 1.0
+    deadline_lead_fraction: float = 0.5
+    preemption: bool = False
+    preemption_budget_s: float = 0.010
     max_superkernel_size: int = 128
     r_bucketing: str = "pow2"
     straggler_eviction_ratio: float = 1.5
@@ -385,6 +390,17 @@ class SystemSpec:
                 "mode='live' drives ONE MultiTenantEngine; multi-replica / "
                 "heterogeneous / autoscaled fleets are sim-only for now "
                 "(set fleet to a single plain replica)")
+        if self.mode == "live" and self.scheduler is not None:
+            if self.scheduler.admission_policy != "cap":
+                raise ValueError(
+                    "mode='live' supports admission_policy='cap' only: "
+                    "feasibility admission prices completions through a "
+                    "cost model the live engine does not carry yet")
+            if self.scheduler.preemption:
+                raise ValueError(
+                    "mode='live' does not support scheduler.preemption: "
+                    "ahead-of-window dispatch pricing needs the sim cost "
+                    "model (sim-only for now)")
         if self.fleet.specs is not None and self.cost_model.kind == "calibrated":
             raise ValueError(
                 "cost_model.kind='calibrated' cannot combine with "
@@ -411,6 +427,13 @@ class SystemSpec:
                     "fleet.workers > 1 requires the fixed batching window "
                     "(scheduler.batching_policy='fixed'); got "
                     f"{self.scheduler.batching_policy!r}")
+            if (self.scheduler is not None
+                    and self.scheduler.admission_policy != "cap"):
+                raise ValueError(
+                    "fleet.workers > 1 requires admission_policy='cap' "
+                    "(feasibility admission reads per-replica committed "
+                    "horizons the shard merge does not replay); got "
+                    f"{self.scheduler.admission_policy!r}")
 
     # ----------------------------------------------------------- round trip
     def to_dict(self) -> Dict:

@@ -49,6 +49,14 @@ class SchedulerStats:
     # instant and had to re-pump one epsilon later (float rounding left
     # the window a ULP short of elapsed) — drift that used to be silent
     ripe_nudges: int = 0
+    # feasibility admission: rejects because the priced completion missed
+    # the deadline beyond the oversubscription allowance (subset of
+    # ``rejected``), and admits that landed past the deadline but inside it
+    deadline_rejected: int = 0
+    oversubscribed: int = 0
+    # unripe buckets force-dispatched ahead of their window because
+    # waiting would have missed their deadline
+    preemptions: int = 0
 
     @property
     def total_flops(self) -> float:
@@ -99,6 +107,25 @@ class DynamicSpaceTimeScheduler:
         # without an admission cap the per-tenant counters are never read;
         # skipping them saves a defaultdict update per submitted workload
         self.queue._track_tenants = self.schedule.max_pending_per_tenant is not None
+        # feasibility admission: earliest instant all admitted-but-
+        # unfinished work can complete, advanced O(1) per admit and
+        # naturally overtaken by the clock as dispatches drain it.
+        self._feasibility = self.schedule.admission_policy == "feasibility"
+        if self._feasibility and self.cost_model is None:
+            raise ValueError(
+                "admission_policy='feasibility' needs a cost_model to price "
+                "candidate completions"
+            )
+        self._committed_s = 0.0
+        self._edf_mode = bool(getattr(self.policy, "deadline_aware", False))
+        # per-tenant preemption debt: seconds of ahead-of-window dispatch
+        # each tenant has charged against preemption_budget_s
+        self._preempt_debt: Dict[int, float] = {}
+        # why the last submit admitted/rejected (recorder reason codes:
+        # 0 admit, 1 oversubscribed admit, 2 cap reject, 3 infeasible
+        # reject); a flight-recorder shard, when attached, reads this.
+        self.admit_reason = 0
+        self.recorder = None
 
     # ---------------------------------------------------------------- intake
     def submit(self, item, now: Optional[float] = None) -> bool:
@@ -110,10 +137,52 @@ class DynamicSpaceTimeScheduler:
         cap = self.schedule.max_pending_per_tenant
         if cap is not None and self.queue.pending_for_tenant(item.tenant_id) >= cap:
             self.stats.rejected += 1
+            self.admit_reason = 2
             return False
-        item.arrival_time = now if now is not None else self.clock.now()
+        t = now if now is not None else self.clock.now()
+        if self._feasibility:
+            est = self._estimate_item_s(item)
+            start = self._committed_s
+            clk = self.clock.now()
+            if clk > start:
+                start = clk
+            if t > start:
+                start = t
+            predicted = start + est
+            deadline = t + item.slo_s
+            if predicted > deadline + (self.schedule.oversubscription - 1.0) * item.slo_s:
+                self.stats.rejected += 1
+                self.stats.deadline_rejected += 1
+                self.admit_reason = 3
+                return False
+            self._committed_s = predicted
+            if predicted > deadline:
+                self.stats.oversubscribed += 1
+                self.admit_reason = 1
+            else:
+                self.admit_reason = 0
+        else:
+            self.admit_reason = 0
+        item.arrival_time = t
         self.queue.push(item)
         return True
+
+    def _estimate_item_s(self, item) -> float:
+        """Price one item's marginal service time WITHOUT side effects.
+
+        Prefers the cost model's ``item_s`` marginal (roofline/calibrated),
+        then a non-mutating ``estimate``; falls back to calling the model on
+        a singleton batch. Never used on models whose ``__call__`` mutates
+        (ColdStartCostModel exposes both safe entry points).
+        """
+        cm = self.cost_model
+        fn = getattr(cm, "item_s", None)
+        if fn is not None:
+            return fn(item)
+        fn = getattr(cm, "estimate", None)
+        if fn is not None:
+            return fn((item,))
+        return cm((item,))
 
     # ---------------------------------------------------------------- dispatch
     def _ripe(self, bucket: Hashable, count: int, now: float) -> bool:
@@ -136,6 +205,8 @@ class DynamicSpaceTimeScheduler:
         super-kernel per exact shape.
         """
         now = now if now is not None else self.clock.now()
+        if self._edf_mode and not force:
+            return self._pump_edf(now)
         completed: List = []
 
         if self.schedule.allow_ragged_merge:
@@ -175,6 +246,71 @@ class DynamicSpaceTimeScheduler:
                     break
                 completed.extend(self._dispatch(batch))
                 if len(batch) < self.schedule.max_superkernel_size:
+                    break
+        return completed
+
+    def _pump_edf(self, now: float) -> List:
+        """Drain ripe buckets earliest-deadline-first; with preemption on,
+        force-dispatch an unripe bucket whose deadline cannot survive its
+        remaining window, merged into the same deadline order.
+
+        Preemption is bounded interference: each force-dispatch charges its
+        priced service time against the tenant's ``preemption_budget_s``
+        debt, so one tight-deadline tenant cannot starve ripe cohorts
+        indefinitely. Every preemption is emitted through the flight
+        recorder (when attached) with the number of ripe victim cohorts it
+        jumped ahead of.
+        """
+        policy = self.policy
+        cap = self.schedule.max_superkernel_size
+        preempt = self.schedule.preemption
+        budget = self.schedule.preemption_budget_s
+        # (deadline, phase, scan_order, bucket, est_s, tenant) — phase 0 is
+        # a ripe bucket, phase 1 a preempting (unripe, at-risk) one; the
+        # sort keys on the deadline first, scan order breaks ties so equal
+        # deadlines stay deterministic across reruns.
+        ready = []
+        order = 0
+        for bucket, count in self.queue.buckets():
+            pending = self.queue.peek(bucket)
+            if not pending:
+                continue
+            order += 1
+            dl = min(it.arrival_time + it.slo_s for it in pending)
+            # same float expression the simulator's calendar stores, so a
+            # pump at a calendar instant finds the bucket ripe exactly
+            ripe_at = min(policy.ripe_at(it) for it in pending)
+            if count >= cap or now >= ripe_at:
+                ready.append((dl, 0, order, bucket, 0.0, -1))
+            elif preempt and self.cost_model is not None:
+                est = self._estimate_item_s(pending[0])
+                tid = pending[0].tenant_id
+                # at risk: waiting out the window misses the deadline, but
+                # dispatching now still makes it — and the tenant has debt
+                # budget left to pay for jumping the queue.
+                if (
+                    ripe_at + est > dl
+                    and now + est <= dl
+                    and self._preempt_debt.get(tid, 0.0) + est <= budget
+                ):
+                    ready.append((dl, 1, order, bucket, est, tid))
+        if not ready:
+            return []
+        ready.sort()
+        completed: List = []
+        for dl, phase, _order, bucket, est, tid in ready:
+            if phase == 1:
+                victims = sum(1 for r in ready if r[1] == 0 and (r[0], r[1], r[2]) > (dl, 1, _order))
+                self._preempt_debt[tid] = self._preempt_debt.get(tid, 0.0) + est
+                self.stats.preemptions += 1
+                if self.recorder is not None:
+                    self.recorder.record_preempt(now, tid, bucket, est, victims)
+            while True:
+                batch = self.queue.pop_batch(bucket, cap)
+                if not batch:
+                    break
+                completed.extend(self._dispatch(batch))
+                if len(batch) < cap:
                     break
         return completed
 
@@ -242,6 +378,9 @@ class DynamicSpaceTimeScheduler:
             "cache_hit_rate": self.cache.stats.hit_rate,
             "evicted_tenants": float(len(self.evicted)),
             "ripe_nudges": float(self.stats.ripe_nudges),
+            "deadline_rejected": float(self.stats.deadline_rejected),
+            "oversubscribed": float(self.stats.oversubscribed),
+            "preemptions": float(self.stats.preemptions),
         }
         rep.update(self.monitor.summary())
         return rep

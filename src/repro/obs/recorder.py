@@ -64,11 +64,20 @@ class ReplicaShard:
         self.strategy: Optional[str] = None
         self._bucket_index: Dict[Hashable, int] = {}
         self._bucket_labels: List[str] = []
-        # arrivals (one row per routed arrival, admitted or not)
+        # arrivals (one row per routed arrival, admitted or not); reason
+        # codes mirror scheduler.admit_reason: 0 admit, 1 oversubscribed
+        # admit, 2 pending-cap reject, 3 infeasible-deadline reject
         self._arr_t = array("d")
         self._arr_tenant = array("l")
         self._arr_bucket = array("l")
         self._arr_admitted = array("b")
+        self._arr_reason = array("b")
+        # preemptions (one row per ahead-of-window force-dispatch)
+        self._pre_t = array("d")
+        self._pre_tenant = array("l")
+        self._pre_bucket = array("l")
+        self._pre_est = array("d")
+        self._pre_victims = array("l")
         # dispatch spans (one row per super-dispatch)
         self._dsp_t0 = array("d")
         self._dsp_dur = array("d")
@@ -94,11 +103,23 @@ class ReplicaShard:
 
     # ------------------------------------------------------------- record
     def record_arrival(self, t_s: float, tenant_id: int, bucket,
-                       admitted: bool) -> None:
+                       admitted: bool, reason: int = 0) -> None:
         self._arr_t.append(t_s)
         self._arr_tenant.append(tenant_id)
         self._arr_bucket.append(self._intern(bucket))
         self._arr_admitted.append(1 if admitted else 0)
+        self._arr_reason.append(reason)
+
+    def record_preempt(self, t_s: float, tenant_id: int, bucket,
+                       est_s: float, victims: int) -> None:
+        """One EDF preemption: an unripe bucket force-dispatched because
+        waiting out its window would miss its deadline, jumping ahead of
+        ``victims`` ripe cohorts at priced cost ``est_s``."""
+        self._pre_t.append(t_s)
+        self._pre_tenant.append(tenant_id)
+        self._pre_bucket.append(self._intern(bucket))
+        self._pre_est.append(est_s)
+        self._pre_victims.append(victims)
 
     def record_dispatch(self, t1_s: float, dur_s: float, batch: Sequence,
                         cold: bool) -> None:
@@ -135,11 +156,18 @@ class ReplicaShard:
     def n_requests(self) -> int:
         return len(self._req_t0)
 
+    @property
+    def n_preemptions(self) -> int:
+        return len(self._pre_t)
+
     # ---------------------------------------------------- worker transport
     _COLUMNS = ("_arr_t", "_arr_tenant", "_arr_bucket", "_arr_admitted",
+                "_arr_reason",
                 "_dsp_t0", "_dsp_dur", "_dsp_bucket", "_dsp_size",
                 "_dsp_cold", "_req_t0", "_req_t1", "_req_tenant",
-                "_req_slo", "_req_bucket")
+                "_req_slo", "_req_bucket",
+                "_pre_t", "_pre_tenant", "_pre_bucket", "_pre_est",
+                "_pre_victims")
 
     def payload(self) -> Dict:
         """Compact picklable form (arrays + label table) for shipping a
@@ -212,7 +240,8 @@ class FlightRecorder:
         """Every recorded row, across shards and the fleet level."""
         n = self.n_routes + len(self.scale_events)
         for s in self.shards.values():
-            n += s.n_arrivals + s.n_dispatches + s.n_requests
+            n += (s.n_arrivals + s.n_dispatches + s.n_requests
+                  + s.n_preemptions)
         return n
 
 

@@ -95,13 +95,28 @@ def chrome_trace_events(rec: FlightRecorder) -> List[Dict]:
                  "name": labels[bi],
                  "args": {"replica": rid, "slo_ms": slo * 1e3,
                           "met": lat <= slo}})
-        for t, tenant, bi, admitted in zip(s._arr_t, s._arr_tenant,
-                                           s._arr_bucket, s._arr_admitted):
+        for t, tenant, bi, admitted, reason in zip(
+                s._arr_t, s._arr_tenant, s._arr_bucket, s._arr_admitted,
+                s._arr_reason):
             if not admitted:
                 add({"ph": "i", "pid": PID_TENANTS, "tid": tenant,
                      "ts": t * 1e6, "s": "t", "cat": "admission",
-                     "name": "rejected",
+                     "name": ("rejected_infeasible" if reason == 3
+                              else "rejected"),
                      "args": {"bucket": labels[bi], "replica": rid}})
+            elif reason == 1:
+                add({"ph": "i", "pid": PID_TENANTS, "tid": tenant,
+                     "ts": t * 1e6, "s": "t", "cat": "admission",
+                     "name": "oversubscribed",
+                     "args": {"bucket": labels[bi], "replica": rid}})
+        for t, tenant, bi, est, victims in zip(
+                s._pre_t, s._pre_tenant, s._pre_bucket, s._pre_est,
+                s._pre_victims):
+            add({"ph": "i", "pid": PID_REPLICAS, "tid": rid,
+                 "ts": t * 1e6, "s": "t", "cat": "preemption",
+                 "name": "preempt",
+                 "args": {"bucket": labels[bi], "tenant": tenant,
+                          "est_ms": est * 1e3, "victims": victims}})
 
     # --------------------------------------------------------- fleet level
     off = 0

@@ -381,6 +381,9 @@ class FleetSimulator:
             rejected=sum(s.rejected for s in stats),
             evicted_tenants=sum(len(p.scheduler.evicted) for p in self.pumps),
             ripe_nudges=sum(s.ripe_nudges for s in stats),
+            deadline_rejected=sum(s.deadline_rejected for s in stats),
+            oversubscribed=sum(s.oversubscribed for s in stats),
+            preemptions=sum(s.preemptions for s in stats),
         )
 
     def _cold_series(self):

@@ -84,7 +84,10 @@ class MetricsAccumulator:
     def freeze(self, sim_duration_s: float, busy_time_s: float,
                dispatches: int, rejected: int = 0,
                evicted_tenants: int = 0,
-               ripe_nudges: int = 0) -> "SimMetrics":
+               ripe_nudges: int = 0,
+               deadline_rejected: int = 0,
+               oversubscribed: int = 0,
+               preemptions: int = 0) -> "SimMetrics":
         return SimMetrics(
             lat=np.asarray(self._lat, np.float64),
             slo=np.asarray(self._slo, np.float64),
@@ -98,6 +101,9 @@ class MetricsAccumulator:
             rejected=int(rejected),
             evicted_tenants=int(evicted_tenants),
             ripe_nudges=int(ripe_nudges),
+            deadline_rejected=int(deadline_rejected),
+            oversubscribed=int(oversubscribed),
+            preemptions=int(preemptions),
         )
 
 
@@ -114,7 +120,8 @@ class SimMetrics:
 
     def __init__(self, lat, slo, cost, tenant, kind_idx, kinds,
                  sim_duration_s, busy_time_s, dispatches,
-                 rejected=0, evicted_tenants=0, ripe_nudges=0):
+                 rejected=0, evicted_tenants=0, ripe_nudges=0,
+                 deadline_rejected=0, oversubscribed=0, preemptions=0):
         self.lat = lat
         self.slo = slo
         self.cost = cost
@@ -126,10 +133,13 @@ class SimMetrics:
         self.dispatches = dispatches
         self.rejected = rejected
         self.evicted_tenants = evicted_tenants
-        # scheduler drift counter, surfaced in bench rows and RunReport's
+        # scheduler counters, surfaced in bench rows and RunReport's
         # "scheduler" section but deliberately NOT in summary()/to_dict():
         # the metrics JSON layout (SCHEMA_VERSION 1) stays byte-identical
         self.ripe_nudges = ripe_nudges
+        self.deadline_rejected = deadline_rejected
+        self.oversubscribed = oversubscribed
+        self.preemptions = preemptions
         self._met = lat <= slo if lat.size else np.zeros(0, bool)
 
     # ------------------------------------------------------------- headline
@@ -217,6 +227,12 @@ class SimMetrics:
             (f"{prefix}/utilization", s["utilization"] * 100.0, "pct busy"),
             (f"{prefix}/ripe_nudges", float(self.ripe_nudges),
              "count (ungated)"),
+            (f"{prefix}/deadline_rejected", float(self.deadline_rejected),
+             "count (ungated)"),
+            (f"{prefix}/oversubscribed", float(self.oversubscribed),
+             "count (ungated)"),
+            (f"{prefix}/preemptions", float(self.preemptions),
+             "count (ungated)"),
         ]
 
     def to_dict(self) -> Dict:
@@ -288,6 +304,21 @@ class FleetMetrics:
     def ripe_nudges(self) -> int:
         """Fleet-wide scheduler drift counter (sum over replicas)."""
         return self.merged.ripe_nudges
+
+    @property
+    def deadline_rejected(self) -> int:
+        """Fleet-wide feasibility-admission rejects (sum over replicas)."""
+        return self.merged.deadline_rejected
+
+    @property
+    def oversubscribed(self) -> int:
+        """Fleet-wide past-deadline admits (sum over replicas)."""
+        return self.merged.oversubscribed
+
+    @property
+    def preemptions(self) -> int:
+        """Fleet-wide ahead-of-window force-dispatches (sum over replicas)."""
+        return self.merged.preemptions
 
     @property
     def initial_replicas(self) -> int:
@@ -385,6 +416,12 @@ class FleetMetrics:
         ]
         rows.extend([
             (f"{prefix}/ripe_nudges", float(self.ripe_nudges),
+             "count (ungated)"),
+            (f"{prefix}/deadline_rejected", float(self.deadline_rejected),
+             "count (ungated)"),
+            (f"{prefix}/oversubscribed", float(self.oversubscribed),
+             "count (ungated)"),
+            (f"{prefix}/preemptions", float(self.preemptions),
              "count (ungated)"),
             (f"{prefix}/routing_imbalance", self.routing_imbalance,
              "cv routed counts"),

@@ -85,11 +85,19 @@ def _validate(fleet, trace) -> None:
             "workers>1 is incompatible with fleet calibration: the shared "
             "table couples replicas through observed dispatches. "
             "Use workers=1.")
-    if not fleet.pumps or not fleet.pumps[0]._use_calendar:
+    if not fleet.pumps or not getattr(
+            fleet.pumps[0].scheduler.policy, "stable_window", False):
         raise ValueError(
             "workers>1 requires a stable-window batching policy "
-            "(policy='fixed'): slack-adaptive windows need the merged "
-            "single-process timeline. Use workers=1.")
+            "(policy='fixed'): slack-adaptive and deadline-aware policies "
+            "need the merged single-process timeline. Use workers=1.")
+    sched0 = fleet.pumps[0].scheduler.schedule
+    if sched0.admission_policy != "cap":
+        raise ValueError(
+            "workers>1 requires admission_policy='cap': feasibility "
+            "admission prices against a replica's committed horizon, which "
+            "the stalled-replica interleaving couples across shards. "
+            "Use workers=1.")
     if not isinstance(trace, Trace):
         raise ValueError(
             "workers>1 needs a re-iterable Trace (each worker regenerates "
@@ -188,6 +196,9 @@ def _run_replica(pump, rid: int, trace: Trace, n_replicas: int) -> Dict:
         "cold_times": cold_times,
         "cold_flags": cold_flags,
         "ripe_nudges": stats.ripe_nudges,
+        "deadline_rejected": stats.deadline_rejected,
+        "oversubscribed": stats.oversubscribed,
+        "preemptions": stats.preemptions,
         "obs": pump.recorder.payload() if recording else None,
         "routes": routes,
     }
@@ -248,7 +259,10 @@ def _merge(fleet, shards: List[Dict], t_start: float) -> FleetMetrics:
             sim_duration_s=horizon, busy_time_s=s["busy"],
             dispatches=s["dispatches"], rejected=s["rejected"],
             evicted_tenants=s["evicted"],
-            ripe_nudges=s["ripe_nudges"]))
+            ripe_nudges=s["ripe_nudges"],
+            deadline_rejected=s["deadline_rejected"],
+            oversubscribed=s["oversubscribed"],
+            preemptions=s["preemptions"]))
 
     merged = MetricsAccumulator()
     mkinds = merged._kinds
@@ -295,6 +309,9 @@ def _merge(fleet, shards: List[Dict], t_start: float) -> FleetMetrics:
         rejected=sum(s["rejected"] for s in shards),
         evicted_tenants=sum(s["evicted"] for s in shards),
         ripe_nudges=sum(s["ripe_nudges"] for s in shards),
+        deadline_rejected=sum(s["deadline_rejected"] for s in shards),
+        oversubscribed=sum(s["oversubscribed"] for s in shards),
+        preemptions=sum(s["preemptions"] for s in shards),
     )
 
     if fleet.recorder is not None:

@@ -156,9 +156,23 @@ class ReplicaPump:
         # skipped at peek time. seq breaks instant ties without ever
         # comparing bucket keys (buckets aren't orderable).
         policy = self.scheduler.policy
-        self._use_calendar = bool(getattr(policy, "stable_window", False))
-        self._window = policy.window_s((), 0.0) if self._use_calendar else 0.0
+        # deadline-aware (EDF) policies fix each ITEM's ripeness instant at
+        # arrival — same incremental calendar, but a push can LOWER a
+        # bucket's instant (a tight-SLO item ripens before older relaxed
+        # peers), so EDF gets its own note functions below.
+        self._edf = policy if getattr(policy, "deadline_aware", False) else None
+        self._use_calendar = (
+            bool(getattr(policy, "stable_window", False)) or self._edf is not None
+        )
+        self._window = (
+            policy.window_s((), 0.0)
+            if self._use_calendar and self._edf is None else 0.0
+        )
         self._cap = self.scheduler.schedule.max_superkernel_size
+        # preemption can force-dispatch BEFORE any calendar instant, so the
+        # skip-pump-at-submit shortcut must stay off — at-risk buckets are
+        # caught by pumping at every arrival.
+        self._preempt_pump = self.scheduler.schedule.preemption
         self._ripe_at: dict = {}
         self._heap: list = []
         self._seq = 0
@@ -174,16 +188,21 @@ class ReplicaPump:
         admitted = self.scheduler.submit(w, now=t_s)
         rec = self.recorder
         if rec is not None:
-            rec.record_arrival(t_s, w.tenant_id, w.bucket, admitted)
+            rec.record_arrival(t_s, w.tenant_id, w.bucket, admitted,
+                               self.scheduler.admit_reason)
         if admitted:
             self.pending_est_s += w.est_s
             if self._use_calendar:
                 b = w.bucket
-                self._cal_note_push(
-                    b, t_s, len(self.scheduler.queue._buckets[b]))
+                if self._edf is not None:
+                    self._edf_note_push(
+                        b, w, len(self.scheduler.queue._buckets[b]))
+                else:
+                    self._cal_note_push(
+                        b, t_s, len(self.scheduler.queue._buckets[b]))
         # pump even when admission rejected: advancing to t_s may have
         # ripened other buckets (drain_until only covers instants < t_s)
-        if self._use_calendar:
+        if self._use_calendar and not self._preempt_pump:
             # with the calendar we know the earliest ripeness instant
             # without scanning; skip the (previously unconditional) pump
             # when nothing can possibly be ripe. The guard is a few ULPs
@@ -236,6 +255,48 @@ class ReplicaPump:
                     heappush(self._heap, (_NEG_INF, self._seq, b))
             else:
                 t = q[0].arrival_time + window
+                if ripe_at.get(b) != t:
+                    ripe_at[b] = t
+                    self._seq += 1
+                    heappush(self._heap, (t, self._seq, b))
+
+    def _edf_note_push(self, bucket, w, depth: int) -> None:
+        """EDF calendar maintenance after ``w`` lands in ``bucket``: the
+        bucket's instant is the min of its items' fixed ripe_at instants,
+        so any push may lower it (min-update, unlike the fixed window
+        where only the first item sets it)."""
+        ripe_at = self._ripe_at
+        if depth >= self._cap:
+            if ripe_at.get(bucket) != _NEG_INF:
+                ripe_at[bucket] = _NEG_INF
+                self._seq += 1
+                heappush(self._heap, (_NEG_INF, self._seq, bucket))
+            return
+        t = self._edf.ripe_at(w)
+        cur = ripe_at.get(bucket)
+        if cur is None or t < cur:
+            ripe_at[bucket] = t
+            self._seq += 1
+            heappush(self._heap, (t, self._seq, bucket))
+
+    def _edf_note_dispatch(self, done: List) -> None:
+        """Recompute EDF instants of every bucket a pump touched."""
+        queue = self.scheduler.queue
+        buckets_map = queue._buckets
+        ripe_at = self._ripe_at
+        cap = self._cap
+        edf = self._edf
+        for b in {w.bucket for w in done}:
+            q = buckets_map.get(b)
+            if not q:
+                ripe_at.pop(b, None)   # heap entries die lazily
+            elif len(q) >= cap:
+                if ripe_at.get(b) != _NEG_INF:
+                    ripe_at[b] = _NEG_INF
+                    self._seq += 1
+                    heappush(self._heap, (_NEG_INF, self._seq, b))
+            else:
+                t = min(edf.ripe_at(w) for w in q)
                 if ripe_at.get(b) != t:
                     ripe_at[b] = t
                     self._seq += 1
@@ -316,7 +377,10 @@ class ReplicaPump:
         if not done:
             return
         if self._use_calendar:
-            self._cal_note_dispatch(done)
+            if self._edf is not None:
+                self._edf_note_dispatch(done)
+            else:
+                self._cal_note_dispatch(done)
         if self.track_inflight:
             # sequential -= preserves the exact float accumulation order
             # the routing-signal contract (backlog_s) was baselined with
@@ -386,6 +450,9 @@ class ReplicaPump:
         from repro.obs.recorder import dispatch_tap
 
         self.recorder = shard
+        # the scheduler emits preemption decisions directly (they happen
+        # inside its EDF pump, not at the pump boundary)
+        self.scheduler.recorder = shard
         shard.spec_name = self.spec_name
         model = self.cost_model
         base = getattr(model, "base", model)
@@ -405,6 +472,9 @@ class ReplicaPump:
             rejected=sched.stats.rejected,
             evicted_tenants=len(sched.evicted),
             ripe_nudges=sched.stats.ripe_nudges,
+            deadline_rejected=sched.stats.deadline_rejected,
+            oversubscribed=sched.stats.oversubscribed,
+            preemptions=sched.stats.preemptions,
         )
 
 
@@ -435,7 +505,11 @@ class Simulator:
         pump.accs = [acc]
         t_start = pump.clock.now()
 
-        if pump._use_calendar and hasattr(trace, "iter_chunks"):
+        # EDF stays on the per-event loop: its intake needs the real
+        # scheduler.submit per event (feasibility pricing, min-update
+        # calendar) — the chunked fast path's bypasses don't apply.
+        if pump._use_calendar and pump._edf is None \
+                and hasattr(trace, "iter_chunks"):
             self._run_chunked(trace)
         else:
             submit, drain_until = pump.submit, pump.drain_until
@@ -473,7 +547,10 @@ class Simulator:
         queue_push = queue.push
         inf = math.inf
 
-        capped = sched.schedule.max_pending_per_tenant is not None
+        # any active admission control (pending cap OR feasibility pricing)
+        # forces the real scheduler.submit path per event
+        capped = (sched.schedule.max_pending_per_tenant is not None
+                  or sched._feasibility)
         submit_slow = pump.submit
         # recorder hook hoisted out of the loop: recorder-off chunked
         # intake pays zero per-event cost for observability

@@ -325,7 +325,8 @@ class TestCli:
         assert doc["schema_version"] == SCHEMA_VERSION
         assert set(HARDWARE_SPECS) <= set(doc["hardware"])
 
-    @pytest.mark.parametrize("name", ["paper_mix.json", "hetero_fleet.json"])
+    @pytest.mark.parametrize("name", ["paper_mix.json", "hetero_fleet.json",
+                                      "deadline_fleet.json"])
     def test_committed_specs_check(self, name, capsys):
         path = os.path.join(self.SPEC_DIR, name)
         assert cli_main(["check", "--spec", path]) == 0
