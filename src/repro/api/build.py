@@ -4,8 +4,8 @@ These builders translate each declarative sub-spec into the subsystem
 object it wraps — trace generators from ``WorkloadSpec``, cost models
 from ``CostModelSpec``, ``ScheduleConfig`` from ``SchedulerSpec`` — and
 the three executors (``SimRun`` / ``FleetRun`` / ``LiveRun``) drive the
-solo simulator, the fleet simulator, and the live multi-tenant engine
-behind one ``run() -> RunReport`` surface.
+solo simulator, the fleet simulator, and the live engine fleet behind
+one ``run() -> RunReport`` surface.
 
 Construction happens per ``run()`` call, not per executor: cost models
 and routers are stateful (compile caches, EWMA tables, cursors), so each
@@ -20,6 +20,7 @@ for the raw ``SimMetrics``/``FleetMetrics`` their BENCH exports freeze.
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, List, Optional, Sequence
 
@@ -34,6 +35,7 @@ from repro.launch.roofline import resolve_spec
 from repro.sim.costmodel import (
     CalibratedCostModel,
     ColdStartCostModel,
+    FleetCalibrator,
     RooflineCostModel,
     estimate_capacity_hz,
 )
@@ -143,6 +145,26 @@ def build_cost_model(cost: CostModelSpec) -> Callable[[Sequence], float]:
             f"(fit one with `python -m repro calibrate --spec ... --out "
             f"{cost.calibration_path}` or a live dynamic_trace "
             f"--calibrate run)") from None
+
+
+def build_fleet_calibration(cost: CostModelSpec) -> Optional[FleetCalibrator]:
+    """Per-replica measured-cost tables when the spec asks for them.
+
+    Returns None unless ``fleet_calibration_path`` is set. An existing
+    table file is LOADED (fresh replicas start from persisted EWMAs
+    instead of cold ones); otherwise a fresh ``FleetCalibrator`` starts
+    from the roofline prior. Persisting the fitted tables back is the
+    LIVE executor's job — sim runs never write, so the byte-identical
+    rerun contract cannot depend on how many times a spec has run.
+    """
+    if cost.fleet_calibration_path is None:
+        return None
+    prior = RooflineCostModel(
+        spec=resolve_spec(cost.hardware), strategy=cost.strategy,
+        small_kernel_efficiency=cost.small_kernel_efficiency)
+    if os.path.exists(cost.fleet_calibration_path):
+        return FleetCalibrator.load(cost.fleet_calibration_path, prior=prior)
+    return FleetCalibrator(prior=prior, ewma_alpha=cost.ewma_alpha)
 
 
 def build_schedule(spec: SystemSpec) -> Optional[ScheduleConfig]:
@@ -273,6 +295,7 @@ class FleetRun:
             specs=list(fleet.specs) if fleet.specs else None,
             strategy=cost.strategy,
             autoscaler=fleet.autoscale.build() if fleet.autoscale else None,
+            calibration=build_fleet_calibration(cost),
             workers=fleet.workers,
             recorder=rec,
         )
@@ -289,14 +312,23 @@ class FleetRun:
 
 
 class LiveRun:
-    """Live executor: the real jitted ``MultiTenantEngine`` serving
-    actual requests on this host's devices (CPU falls back to the XLA
-    reference kernels). jax imports happen at ``run()`` time so spec
-    validation and sim-only workflows never pay them.
+    """Live executor: N real engines behind the simulator's routing layer
+    (``repro.serving.fleet.LiveFleet``) — the same pump/router/admission
+    core the fleet simulator runs, on the wall clock, executing real work.
+
+    ``workload.arch`` picks the engine. The jax-free pseudo-archs
+    ``"fake"`` (deterministic tokens) and ``"null"`` (no results — the
+    sim-parity twin) serve CI and any CPU; every other name builds one
+    real jitted ``MultiTenantEngine`` per replica over SHARED
+    smoke-variant weights (N replicas space-multiplexing one host is the
+    paper's story told at the cluster layer). jax imports happen at
+    ``run()`` time so spec validation and sim-only workflows never pay
+    them.
 
     Wall-clock latencies are real, so live reports are NOT covered by
-    the byte-identical determinism contract — token streams are (seeded
-    sampling), latencies are not.
+    the byte-identical determinism contract — routing decisions,
+    admission counters and (fake-engine) token streams are
+    deterministic, latencies are not.
     """
 
     executor = "live"
@@ -304,19 +336,39 @@ class LiveRun:
     def __init__(self, spec: SystemSpec):
         self.spec = spec
         self.last_recorder = None
+        # the fleet of the most recent run_metrics() call — the serving
+        # loop keeps it alive to submit requests against
+        self.last_fleet = None
+        self.engine_name = None
+        self.wall_s = 0.0
 
-    def run(self) -> RunReport:
+    def build_engine_factory(self):
+        """``(engine_factory, engine_name, vocab)`` for ``workload.arch``.
+
+        Only the real-arch branch imports jax; "fake"/"null" stay pure
+        python so the live fleet path runs anywhere.
+        """
+        w = self.spec.workload
+        if w.arch == "null":
+            from repro.serving.fleet import NullEngine
+
+            return NullEngine, "null", 32_000
+        if w.arch == "fake":
+            from repro.serving.fleet import FakeEngine
+
+            return (lambda i: FakeEngine(i, max_new_tokens=w.max_new_tokens),
+                    "fake", 32_000)
+
         import dataclasses as _dc
 
         import jax
-        import numpy as np
 
         from repro.config import get_config, smoke_variant
         from repro.models import build_model
-        from repro.serving import EngineConfig, InferenceRequest, MultiTenantEngine
+        from repro.serving import EngineConfig, MultiTenantEngine
+        from repro.serving.fleet import EngineReplica
 
         spec = self.spec
-        w = spec.workload
         cfg = _dc.replace(smoke_variant(get_config(w.arch)), dtype="float32")
         model = build_model(cfg)
         key = jax.random.PRNGKey(w.seed)
@@ -327,66 +379,83 @@ class LiveRun:
         # dispatch), everything else rides the merged space-time path
         engine_mode = ("time_only" if spec.cost_model.strategy == "time_only"
                        else "space_time")
-        engine = MultiTenantEngine(model, params, EngineConfig(
-            num_tenants=w.tenants,
-            slots_per_tenant=2,
-            cache_len=max(32, w.prompt_tokens + w.max_new_tokens + 8),
-            mode=engine_mode,
-            seed=w.seed,
-            schedule=build_schedule(spec),
-        ))
-        rec = build_recorder(spec)
-        if rec is not None:
-            from repro.obs.recorder import dispatch_tap
+        schedule = build_schedule(spec)
 
-            shard = rec.shard(0)
-            shard.strategy = engine_mode
-            engine.recorder = shard
-            engine.scheduler.on_dispatch = dispatch_tap(
-                shard, prev=engine.scheduler.on_dispatch)
-        rng = np.random.RandomState(w.seed)
-        for i in range(w.events):
-            engine.submit(InferenceRequest(
-                tenant_id=i % w.tenants,
-                prompt=list(rng.randint(1, cfg.vocab_size,
-                                        size=w.prompt_tokens)),
-                max_new_tokens=w.max_new_tokens,
+        def factory(i: int) -> EngineReplica:
+            engine = MultiTenantEngine(model, params, EngineConfig(
+                num_tenants=w.tenants,
+                slots_per_tenant=2,
+                cache_len=max(32, w.prompt_tokens + w.max_new_tokens + 8),
+                mode=engine_mode,
+                seed=w.seed + i,
+                schedule=schedule,
             ))
+            return EngineReplica(engine, replica_id=i,
+                                 max_new_tokens=w.max_new_tokens)
+
+        return factory, "jax", cfg.vocab_size
+
+    def build_fleet(self, recorder=None):
+        """Assemble a fresh ``LiveFleet`` (engines included) for this
+        spec — shared by ``run_metrics`` and the HTTP serving loop."""
+        from repro.serving.fleet import LiveFleet
+
+        spec = self.spec
+        fleet_spec, cost = spec.fleet, spec.cost_model
+        factory, engine_name, vocab = self.build_engine_factory()
+        self.engine_name = engine_name
+        calibration = build_fleet_calibration(cost)
+        fleet = LiveFleet(
+            replicas=fleet_spec.replicas,
+            engine_factory=factory,
+            router=spec.router.policy,
+            schedule=build_schedule(spec),
+            cost_model=None if fleet_spec.specs else build_cost_model(cost),
+            compile_s=cost.compile_us * 1e-6,
+            specs=list(fleet_spec.specs) if fleet_spec.specs else None,
+            strategy=cost.strategy,
+            calibration=calibration,
+            recorder=recorder,
+        )
+        return fleet, vocab
+
+    def save_calibration(self, fleet) -> None:
+        """Persist the fleet's fitted per-replica tables (live runs only
+        — the next run, or a sim pricing the same path, starts warm)."""
+        path = self.spec.cost_model.fleet_calibration_path
+        if path and fleet.calibration is not None:
+            fleet.calibration.save(path)
+
+    def run_metrics(self):
+        """Fresh fleet over real engines, one trace, raw ``FleetMetrics``."""
+        import numpy as np
+
+        spec = self.spec
+        w = spec.workload
+        mix = build_mix(w)
+        trace = build_trace(spec, mix)
+        rec = build_recorder(spec)
+        fleet, vocab = self.build_fleet(recorder=rec)
+        rng = np.random.RandomState(w.seed)
+
+        def payload_fn(tspec):
+            return rng.randint(1, vocab, size=w.prompt_tokens).tolist()
+
         t0 = time.perf_counter()
-        engine.run_until_drained()
-        wall_s = time.perf_counter() - t0
-
-        summary = {k: float(v) for k, v in engine.report().items()}
-        summary["wall_s"] = wall_s
-        summary["requests"] = float(len(engine.finished))
-        st = engine.scheduler.stats
-        metrics = {
-            "summary": summary,
-            "arch": w.arch,
-            "engine_mode": engine_mode,
-            # same section shape as the sim executors (``report``
-            # prints it), from the live scheduler's own counters
-            "scheduler": {
-                "busy_time_s": float(st.busy_time_s),
-                "completed": float(st.problems_completed),
-                "dispatches": float(st.dispatches),
-                "rejected": float(st.rejected),
-                "ripe_nudges": float(st.ripe_nudges),
-                "deadline_rejected": float(st.deadline_rejected),
-                "oversubscribed": float(st.oversubscribed),
-                "preemptions": float(st.preemptions),
-                "total_cost": float(st.total_cost),
-            },
-        }
+        metrics = fleet.run(trace, payload_fn=payload_fn)
+        self.wall_s = time.perf_counter() - t0
+        self.save_calibration(fleet)
         self.last_recorder = rec
-        if rec is not None:
-            from repro.obs.telemetry import windowed_series
-            from repro.obs.trace_export import export_chrome_trace
+        self.last_fleet = fleet
+        return metrics
 
-            obs = spec.observability
-            metrics["telemetry"] = windowed_series(rec, obs.window_s)
-            if obs.trace_path:
-                with open(obs.trace_path, "w") as fh:
-                    fh.write(export_chrome_trace(rec) + "\n")
-        return RunReport(executor=self.executor, mode=spec.mode,
-                         spec=spec.to_dict(), metrics=metrics)
+    def run(self) -> RunReport:
+        m = self.run_metrics()
+        doc = _augment_metrics(self.spec, m.to_dict(), m,
+                               self.last_recorder)
+        # live extras on top of the shared FleetMetrics schema
+        doc["arch"] = self.spec.workload.arch
+        doc["engine"] = self.engine_name
+        doc["wall_s"] = self.wall_s
+        return RunReport(executor=self.executor, mode=self.spec.mode,
+                         spec=self.spec.to_dict(), metrics=doc)

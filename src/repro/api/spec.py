@@ -6,7 +6,7 @@ replicas of which hardware (``FleetSpec`` + ``AutoscaleSpec``), routed
 how (``RouterSpec``), scheduled how (``SchedulerSpec``), and priced how
 (``CostModelSpec``). ``build()`` assembles the right executor for the
 spec's shape — the solo ``Simulator`` for one replica, the
-``FleetSimulator`` for many, the live ``MultiTenantEngine`` for
+``FleetSimulator`` for many, the engine-backed ``LiveFleet`` for
 ``mode="live"`` — and every executor returns the same ``RunReport``
 (metrics + spec echo + schema_version).
 
@@ -20,7 +20,8 @@ Field-to-subsystem map:
     cost_model  -> repro.sim.costmodel (roofline / calibrated priors,
                                         cold-start compile accounting,
                                         launch.roofline.HARDWARE_SPECS)
-    mode="live" -> repro.serving.MultiTenantEngine (real jitted decode)
+    mode="live" -> repro.serving.fleet.LiveFleet (N real engines behind
+                                       the same routers, wall clock)
 
 Every spec constructor validates eagerly with actionable errors (unknown
 hardware names list the registered ``HARDWARE_SPECS`` keys, unknown
@@ -307,6 +308,12 @@ class CostModelSpec:
     compile_us: float = 0.0
     calibration_path: Optional[str] = None
     ewma_alpha: float = 0.2
+    # per-replica measured-cost tables (FleetCalibrator): fleet and live
+    # runs LOAD this file when it exists (fresh replicas start from
+    # persisted tables instead of cold EWMAs) and live runs SAVE the
+    # fitted tables back on completion. Sim runs never write it — the
+    # byte-identical rerun contract must not depend on run count.
+    fleet_calibration_path: Optional[str] = None
 
     def __post_init__(self) -> None:
         if self.kind not in COST_KINDS:
@@ -325,6 +332,13 @@ class CostModelSpec:
             raise ValueError(
                 'kind="calibrated" needs calibration_path (a table saved by '
                 "CalibratedCostModel.save / `python -m repro calibrate`)")
+        if self.fleet_calibration_path is not None:
+            if not isinstance(self.fleet_calibration_path, str) \
+                    or not self.fleet_calibration_path:
+                raise ValueError(
+                    "fleet_calibration_path must be a non-empty path "
+                    f"(got {self.fleet_calibration_path!r}); it names the "
+                    "JSON file FleetCalibrator.save writes")
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -385,22 +399,22 @@ class SystemSpec:
     def __post_init__(self) -> None:
         if self.mode not in MODES:
             raise ValueError(f"unknown mode {self.mode!r} (have {MODES})")
-        if self.mode == "live" and self.fleet.is_fleet:
-            raise ValueError(
-                "mode='live' drives ONE MultiTenantEngine; multi-replica / "
-                "heterogeneous / autoscaled fleets are sim-only for now "
-                "(set fleet to a single plain replica)")
-        if self.mode == "live" and self.scheduler is not None:
-            if self.scheduler.admission_policy != "cap":
+        if self.mode == "live":
+            # the live fleet runs the same PumpCore/router stack as the
+            # simulator — replicas, hetero specs, feasibility admission
+            # and preemption are all valid. Only process-level features
+            # stay sim-only:
+            if self.fleet.workers > 1:
                 raise ValueError(
-                    "mode='live' supports admission_policy='cap' only: "
-                    "feasibility admission prices completions through a "
-                    "cost model the live engine does not carry yet")
-            if self.scheduler.preemption:
+                    "mode='live' cannot combine with fleet.workers > 1: "
+                    "sharded forked execution is a simulator-only "
+                    "optimization (replicas already execute real work)")
+            if self.fleet.autoscale is not None:
                 raise ValueError(
-                    "mode='live' does not support scheduler.preemption: "
-                    "ahead-of-window dispatch pricing needs the sim cost "
-                    "model (sim-only for now)")
+                    "mode='live' does not support fleet.autoscale yet: "
+                    "live elasticity means provisioning real engines "
+                    "mid-run (a deployment concern — see ROADMAP); fix "
+                    "the replica count")
         if self.fleet.specs is not None and self.cost_model.kind == "calibrated":
             raise ValueError(
                 "cost_model.kind='calibrated' cannot combine with "
@@ -434,6 +448,17 @@ class SystemSpec:
                     "(feasibility admission reads per-replica committed "
                     "horizons the shard merge does not replay); got "
                     f"{self.scheduler.admission_policy!r}")
+            if self.cost_model.fleet_calibration_path is not None:
+                raise ValueError(
+                    "fleet.workers > 1 cannot combine with cost_model."
+                    "fleet_calibration_path: calibration reads fleet-wide "
+                    "dispatch state the shard merge does not replay")
+        if (self.cost_model.fleet_calibration_path is not None
+                and self.mode == "sim" and not self.fleet.is_fleet):
+            raise ValueError(
+                "cost_model.fleet_calibration_path needs a fleet (replicas "
+                "> 1, specs, or autoscale) or mode='live': the solo "
+                "simulator has no per-replica tables to calibrate")
 
     # ----------------------------------------------------------- round trip
     def to_dict(self) -> Dict:
@@ -535,7 +560,7 @@ class SystemSpec:
     # ----------------------------------------------------------------- build
     def build(self):
         """Assemble the executor this spec's shape calls for: solo
-        ``Simulator`` / ``FleetSimulator`` / live ``MultiTenantEngine``
+        ``Simulator`` / ``FleetSimulator`` / engine-backed ``LiveFleet``
         behind a uniform ``run() -> RunReport`` surface."""
         from repro.api.build import FleetRun, LiveRun, SimRun
 
@@ -548,3 +573,88 @@ class SystemSpec:
     def run(self):
         """One-shot convenience: ``build()`` then ``run()``."""
         return self.build().run()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """The HTTP front door (``python -m repro serve``), declaratively.
+
+    ``system`` describes the fleet behind the endpoints and must be a
+    live spec — the server routes every ``POST /v1/predict`` through the
+    same ``LiveFleet`` a ``simulate`` run of that spec would build, so
+    capacity planning done in sim transfers to the deployed shape.
+    ``workload`` fields still matter: tenants define the request classes
+    (bucket/SLO per tenant id), ``arch`` picks the engine.
+
+    ``report_path``, when set, receives the schema-versioned ``RunReport``
+    JSON on graceful shutdown — the serve-smoke CI contract.
+    """
+
+    system: SystemSpec = dataclasses.field(
+        default_factory=lambda: SystemSpec(mode="live"))
+    host: str = "127.0.0.1"
+    port: int = 8077
+    report_path: Optional[str] = None
+    request_timeout_s: float = 30.0   # per-request wait on the done event
+    poll_interval_s: float = 0.050    # pump-thread heartbeat upper bound
+
+    def __post_init__(self) -> None:
+        if self.system.mode != "live":
+            raise ValueError(
+                "serve.system must have mode='live' (a server cannot fan "
+                "out over simulated replicas); got "
+                f"mode={self.system.mode!r}")
+        if not (0 <= self.port < 65536):
+            # port 0 binds an OS-assigned free port (tests / CI smoke)
+            raise ValueError(f"port must be in [0, 65536), got {self.port}")
+        if self.request_timeout_s <= 0:
+            raise ValueError(
+                f"request_timeout_s must be > 0, got {self.request_timeout_s}")
+        if self.poll_interval_s <= 0:
+            raise ValueError(
+                f"poll_interval_s must be > 0, got {self.poll_interval_s}")
+
+    def to_dict(self) -> Dict:
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "system": self.system.to_dict(),
+            "host": self.host,
+            "port": self.port,
+            "report_path": self.report_path,
+            "request_timeout_s": self.request_timeout_s,
+            "poll_interval_s": self.poll_interval_s,
+        }
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "ServeSpec":
+        if not isinstance(data, dict):
+            raise ValueError(
+                f"serve spec must be a JSON object, got {type(data).__name__}")
+        data = dict(data)
+        data.pop("schema_version", None)
+        if isinstance(data.get("system"), dict):
+            data["system"] = SystemSpec.from_dict(data["system"])
+        return _from_dict(cls, data, "serve")
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ServeSpec":
+        return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def load(cls, path: str) -> "ServeSpec":
+        try:
+            with open(path) as fh:
+                return cls.from_json(fh.read())
+        except FileNotFoundError:
+            raise ValueError(
+                f"serve spec file not found: {path!r} (committed examples "
+                f"live under examples/specs/)") from None
+
+    def save(self, path: str) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            fh.write(self.to_json() + "\n")
+        os.replace(tmp, path)

@@ -31,6 +31,10 @@ class Clock:
     def advance(self, dt_s: float) -> None:
         raise NotImplementedError
 
+    def advance_to(self, t_s: float) -> None:
+        """Jump forward to an absolute time (never backwards)."""
+        raise NotImplementedError
+
 
 class WallClock(Clock):
     """Real host time. The production default."""
@@ -40,6 +44,13 @@ class WallClock(Clock):
 
     def advance(self, dt_s: float) -> None:
         # wall time advances on its own; modeled time has nothing to add
+        pass
+
+    def advance_to(self, t_s: float) -> None:
+        # same contract as advance: wall time cannot be pushed. This is
+        # what makes the pump core clock-agnostic — the drain machinery
+        # calls advance_to unconditionally, and only virtual timelines
+        # actually move under it.
         pass
 
 

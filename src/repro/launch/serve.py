@@ -1,72 +1,250 @@
-"""Serving launcher: multi-tenant space-time engine with a stochastic
-request trace (the end-to-end serving driver).
+"""HTTP front door over the live fleet (``python -m repro serve``).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b -R 4 \
-        --requests 24 --rate 20
+A thin stdlib serving loop — ``ThreadingHTTPServer``, no framework —
+fanning requests out over the same ``LiveFleet`` a ``simulate`` run of
+the spec would build: real ``DynamicSpaceTimeScheduler`` replicas behind
+the sim routers, so capacity planning done in sim transfers to the
+deployed shape unchanged.
+
+Endpoints:
+
+    GET  /healthz     liveness + fleet shape (replicas, engine, router)
+    POST /v1/predict  {"tenant_id": 0, "prompt": [1,2,3]} — routed,
+                      admission-controlled, blocks until the cohort the
+                      request merged into completes; 429 with the
+                      scheduler's reason code when admission rejects
+    GET  /v1/report   the schema-versioned RunReport for traffic so far
+
+Concurrency model: handler threads submit under one fleet lock; a single
+pump thread wakes at ``min(next ripeness instant, poll_interval_s)`` and
+drives dispatch. Completion is signalled per-request through the pump's
+``on_complete`` hook (a ``threading.Event`` on each workload), so a
+blocked handler costs one waiting thread, never a spin.
+
+On SIGTERM/SIGINT (or server shutdown) the fleet drains and, when
+``report_path`` is set, the final ``RunReport`` JSON lands there — the
+serve-smoke CI contract.
+
+    PYTHONPATH=src python -m repro serve --spec examples/specs/serve_smoke.json
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
+import json
+import signal
+import threading
 import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
 
-import jax
-import numpy as np
+from repro.api.build import LiveRun, _augment_metrics, build_mix, build_recorder
+from repro.api.report import RunReport
+from repro.api.spec import ServeSpec
 
-from repro.config import get_config, smoke_variant
-from repro.models import build_model
-from repro.serving import EngineConfig, InferenceRequest, MultiTenantEngine
+#: scheduler admission codes -> wire names (core.scheduler.admit_reason)
+ADMIT_REASONS = {0: "admitted", 1: "oversubscribed", 2: "cap",
+                 3: "infeasible"}
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm-1.6b")
-    ap.add_argument("-R", "--tenants", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=24)
-    ap.add_argument("--rate", type=float, default=50.0, help="arrivals/sec (Poisson)")
-    ap.add_argument("--max-new-tokens", type=int, default=10)
-    ap.add_argument("--mode", default="space_time", choices=["space_time", "time_only"])
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+class _HttpServer(ThreadingHTTPServer):
+    # socketserver's default listen backlog (5) resets connections under
+    # concurrent load; predict calls block for a whole cohort, so bursts
+    # of pending connects are the normal case here
+    request_queue_size = 128
+    daemon_threads = True
 
-    cfg = dataclasses.replace(smoke_variant(get_config(args.arch)), dtype="float32")
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = [model.init(jax.random.fold_in(key, t)) for t in range(args.tenants)]
-    engine = MultiTenantEngine(
-        model, params,
-        EngineConfig(num_tenants=args.tenants, slots_per_tenant=2,
-                     cache_len=96, mode=args.mode),
-    )
 
-    rng = np.random.RandomState(args.seed)
-    pending = args.requests
-    next_arrival = time.perf_counter()
-    print(f"serving {args.requests} requests over {args.tenants} tenants "
-          f"({args.mode}, ~{args.rate}/s Poisson)")
-    while pending > 0 or engine.queue or engine.active:
-        now = time.perf_counter()
-        while pending > 0 and now >= next_arrival:
-            engine.submit(InferenceRequest(
-                tenant_id=int(rng.randint(args.tenants)),
-                prompt=list(rng.randint(1, cfg.vocab_size, size=6)),
-                max_new_tokens=args.max_new_tokens,
-            ))
-            pending -= 1
-            next_arrival += rng.exponential(1.0 / args.rate)
-        engine.step()
+class FleetServer:
+    """One live fleet + pump thread + HTTP server, owned together."""
 
-    rep = engine.report()
-    print(f"\nfinished={rep['finished']:.0f} tokens={rep['decode_tokens']:.0f} "
-          f"steps={rep['steps']:.0f}")
-    print(f"step latency p50={rep['p50_s']*1e3:.1f}ms p95={rep['p95_s']*1e3:.1f}ms "
-          f"inter-tenant spread={rep.get('spread', 0):.1%}")
-    lat = [r.latency_s for r in engine.finished if r.latency_s]
-    ttft = [r.ttft_s for r in engine.finished if r.ttft_s]
-    print(f"request latency mean={np.mean(lat)*1e3:.0f}ms  "
-          f"TTFT mean={np.mean(ttft)*1e3:.0f}ms")
+    def __init__(self, spec: ServeSpec):
+        self.spec = spec
+        self.run = LiveRun(spec.system)
+        self.recorder = build_recorder(spec.system)
+        self.fleet, self.vocab = self.run.build_fleet(recorder=self.recorder)
+        self.mix = build_mix(spec.system.workload)
+        self.lock = threading.Lock()
+        self.started_s = time.perf_counter()
+        self.requests = 0
+        self.rejected = 0
+        self._stop = threading.Event()
+        self._pump_thread = threading.Thread(
+            target=self._pump_loop, name="fleet-pump", daemon=True)
+        self.httpd = _HttpServer(
+            (spec.host, spec.port), _make_handler(self))
+        self.port = self.httpd.server_address[1]
+
+    # ------------------------------------------------------------ serving
+    def predict(self, tenant_id: int, prompt, max_new_tokens=None) -> dict:
+        """Route one request through the fleet and wait for its cohort."""
+        spec = self.mix[tenant_id % len(self.mix)]
+        done = threading.Event()
+        t0 = time.perf_counter()
+        with self.lock:
+            self.requests += 1
+            w, replica_id, admitted, reason = self.fleet.submit_one(
+                spec, cost=spec.cost, payload=list(prompt or ()), done=done)
+        if not admitted:
+            with self.lock:
+                self.rejected += 1
+            return {"status": 429,
+                    "error": f"admission rejected: "
+                             f"{ADMIT_REASONS.get(reason, reason)}",
+                    "reason": ADMIT_REASONS.get(reason, str(reason)),
+                    "replica": replica_id}
+        if not done.wait(self.spec.request_timeout_s):
+            return {"status": 504,
+                    "error": f"request did not complete within "
+                             f"{self.spec.request_timeout_s:g}s",
+                    "replica": replica_id}
+        return {"status": 200,
+                "tenant_id": spec.tenant_id,
+                "tokens": w.result,
+                "replica": replica_id,
+                "latency_s": time.perf_counter() - t0}
+
+    def report(self) -> RunReport:
+        """Freeze the traffic served so far into a RunReport."""
+        with self.lock:
+            horizon = self.fleet.now() - self.fleet.start_s
+            m = self.fleet.freeze(horizon)
+        doc = _augment_metrics(self.spec.system, m.to_dict(), m,
+                               self.recorder)
+        doc["arch"] = self.spec.system.workload.arch
+        doc["engine"] = self.run.engine_name
+        doc["wall_s"] = time.perf_counter() - self.started_s
+        doc["http"] = {"requests": self.requests, "rejected": self.rejected}
+        return RunReport(executor="serve", mode="live",
+                         spec=self.spec.system.to_dict(), metrics=doc)
+
+    # ---------------------------------------------------------- lifecycle
+    def _pump_loop(self) -> None:
+        interval = self.spec.poll_interval_s
+        while not self._stop.is_set():
+            with self.lock:
+                self.fleet.poll()
+                t_next = self.fleet.next_ripe_time()
+            now = self.fleet.now()
+            delay = interval if t_next is None else max(0.0, t_next - now)
+            self._stop.wait(min(delay, interval))
+
+    def start(self) -> None:
+        self._pump_thread.start()
+
+    def serve_forever(self) -> None:
+        self.start()
+        try:
+            self.httpd.serve_forever(poll_interval=0.2)
+        finally:
+            self.shutdown()
+
+    def shutdown(self) -> None:
+        """Stop pumping, drain the fleet, persist the final report."""
+        if self._stop.is_set():
+            return
+        self._stop.set()
+        if self._pump_thread.is_alive():
+            self._pump_thread.join(timeout=5.0)
+        with self.lock:
+            self.fleet._drain_wall_tail(
+                timeout_s=self.spec.request_timeout_s)
+            self.run.save_calibration(self.fleet)
+        if self.spec.report_path:
+            self.report().save(self.spec.report_path)
+        self.httpd.server_close()
+
+
+def _make_handler(server: FleetServer):
+    class Handler(BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+
+        def log_message(self, fmt, *args):  # stay quiet; CI parses stdout
+            pass
+
+        def _send(self, code: int, doc: dict) -> None:
+            body = (json.dumps(doc, sort_keys=True) + "\n").encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self) -> None:
+            if self.path == "/healthz":
+                self._send(200, {
+                    "status": "ok",
+                    "replicas": len(server.fleet.active),
+                    "engine": server.run.engine_name,
+                    "router": server.fleet.router.name,
+                    "requests": server.requests,
+                })
+                return
+            if self.path == "/v1/report":
+                self._send(200, server.report().to_dict())
+                return
+            self._send(404, {"error": f"no route {self.path!r} (have "
+                                      "/healthz, /v1/predict, /v1/report)"})
+
+        def do_POST(self) -> None:
+            if self.path != "/v1/predict":
+                self._send(404, {"error": f"no route {self.path!r}"})
+                return
+            try:
+                n = int(self.headers.get("Content-Length", 0))
+                doc = json.loads(self.rfile.read(n) or b"{}")
+                tenant_id = int(doc.get("tenant_id", 0))
+                prompt = doc.get("prompt", [])
+                if not isinstance(prompt, list):
+                    raise ValueError("prompt must be a list of token ids")
+            except (ValueError, json.JSONDecodeError) as e:
+                self._send(400, {"error": f"bad request: {e}"})
+                return
+            out = server.predict(tenant_id, prompt)
+            self._send(out.pop("status"), out)
+
+    return Handler
+
+
+def run_server(spec: ServeSpec, ready: Optional[threading.Event] = None,
+               ) -> FleetServer:
+    """Build the fleet, install signal handlers, serve until stopped."""
+    server = FleetServer(spec)
+    if threading.current_thread() is threading.main_thread():
+        # httpd.shutdown() blocks until serve_forever exits, and the
+        # handler runs ON the serve_forever thread — hand it off or the
+        # process deadlocks on its own signal
+        def stop(signum, frame):
+            threading.Thread(target=server.httpd.shutdown,
+                             daemon=True).start()
+
+        signal.signal(signal.SIGTERM, stop)
+        signal.signal(signal.SIGINT, stop)
+    w = spec.system.workload
+    print(f"serving {spec.system.fleet.replicas} replica(s) of "
+          f"arch={w.arch} behind router={spec.system.router.policy} "
+          f"on http://{spec.host}:{server.port}", flush=True)
+    if ready is not None:
+        ready.set()
+    server.serve_forever()
+    if spec.report_path:
+        print(f"wrote {spec.report_path}", flush=True)
+    return server
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="HTTP serving loop over a live fleet (ServeSpec JSON)")
+    ap.add_argument("--spec", required=True, help="ServeSpec JSON file")
+    ap.add_argument("--port", type=int, default=None,
+                    help="override serve.port")
+    args = ap.parse_args(argv)
+    spec = ServeSpec.load(args.spec)
+    if args.port is not None:
+        spec = ServeSpec.from_dict({**spec.to_dict(), "port": args.port})
+    run_server(spec)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

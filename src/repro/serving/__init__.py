@@ -7,7 +7,26 @@ slot-based continuous batcher feeding the decode loop. Prefill and
 decode cohorts are submitted as generic ``Workload`` items through the
 shared ``DynamicSpaceTimeScheduler`` core, which owns admission control,
 per-tenant SLO/latency tracking, and straggler eviction.
+
+``repro.serving.fleet`` puts N engines behind the sim routers (the live
+half of the fleet story). The engine (and therefore jax) is imported
+LAZILY: building live specs, running the deterministic fake-engine fleet,
+and the sim↔live parity suite all stay jax-free — only touching
+``MultiTenantEngine`` / ``EngineConfig`` pays the import.
 """
 
-from repro.serving.engine import EngineConfig, MultiTenantEngine  # noqa: F401
 from repro.serving.request import InferenceRequest, RequestState  # noqa: F401
+
+_ENGINE_EXPORTS = ("EngineConfig", "MultiTenantEngine")
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from repro.serving import engine
+
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_ENGINE_EXPORTS))

@@ -23,8 +23,10 @@ Spin-up is NOT free: the fleet simulator answers a scale-up with a FRESH
 replica — new ``replica_id``, empty compile cache (every super-kernel
 variant recompiles on it: the full cold-start bill), and a clock that
 only starts accepting work ``spinup_s`` after the decision (container /
-weights-load latency). Scale-down retires the newest replica: it stops
-receiving arrivals and drains what it already owns. Both directions are
+weights-load latency). Scale-down retires the replica whose drain cost
+(backlog seconds priced via its own table — ``pick_scale_down``) is
+lowest, the newest on ties: it stops receiving arrivals and drains what
+it already owns. Both directions are
 pure functions of seeded simulator state, so autoscaled fleets keep the
 byte-identical-JSON determinism contract, scale-event timeline included.
 
@@ -122,6 +124,30 @@ class BacklogAutoscaler(Autoscaler):
             self._cooldown = self.cooldown_ticks
             return n - 1
         return n
+
+
+def pick_scale_down(replicas: Sequence, now: float) -> int:
+    """Index of the replica to retire: the one whose DRAIN COST is lowest.
+
+    Drain cost is the replica's ``backlog_s(now)`` — residual busy time
+    plus the estimated seconds of everything it still owns, priced
+    through its own (possibly calibrated) table via the same
+    ``pending_est_s`` accounting the routers read. Retiring the cheapest
+    drainer keeps the most-loaded (and typically longest-warmed) caches
+    serving.
+
+    Tie-break preserves the historical policy: iterate newest→oldest with
+    a strict ``<``, so equal-cost replicas still retire the NEWEST — the
+    longest-warmed caches stay alive and up/down sequences on idle fleets
+    are unchanged from the retire-the-newest era.
+    """
+    best_i = len(replicas) - 1
+    best_cost = replicas[best_i].backlog_s(now)
+    for i in range(len(replicas) - 2, -1, -1):
+        c = replicas[i].backlog_s(now)
+        if c < best_cost:
+            best_i, best_cost = i, c
+    return best_i
 
 
 def make_autoscaler(name: str, **kwargs) -> Autoscaler:

@@ -31,8 +31,9 @@ Three fleet-scale axes beyond PR 3's identical-replica grid:
 * **Elasticity** — an ``Autoscaler`` (``repro.sim.autoscale``) is polled
   at fixed simulated-time ticks; scale-up spawns a FRESH replica (new id,
   EMPTY compile cache — the full cold-start bill — and an optional
-  ``spinup_s`` before it takes work), scale-down retires the newest
-  replica, which drains what it already owns but receives nothing new.
+  ``spinup_s`` before it takes work), scale-down retires the replica
+  with the lowest drain cost (ties: the newest), which drains what it
+  already owns but receives nothing new.
   Every decision lands in ``scale_events`` and the metrics JSON.
 * **Per-replica calibration** — a ``FleetCalibrator`` taps every
   replica's ``on_dispatch`` (the scheduler forwards ``replica_id``) into
@@ -54,8 +55,14 @@ import numpy as np
 
 from repro.config import ScheduleConfig
 from repro.core.clock import VirtualClock
+from repro.core.pump import drain_fleet_tail, drain_merged
 from repro.launch.roofline import TPU_V5E, HardwareSpec
-from repro.sim.autoscale import Autoscaler, ScaleEvent, make_autoscaler
+from repro.sim.autoscale import (
+    Autoscaler,
+    ScaleEvent,
+    make_autoscaler,
+    pick_scale_down,
+)
 from repro.sim.costmodel import (
     ColdStartCostModel,
     FleetCalibrator,
@@ -84,6 +91,31 @@ def _arrival_stream(trace):
     for times, idx, costs, table in iter_chunks():
         for t, i, c in zip(times.tolist(), idx.tolist(), costs.tolist()):
             yield t, table[i], c
+
+
+def calibration_tap(calibration: FleetCalibrator, model):
+    """Dispatch tap that fits WARM costs: a cold dispatch's measured
+    seconds include the one-off compile term, and folding that into
+    the table would make a replica price a key HIGHER right after
+    compiling it (inverting warm-cache affinity — the first
+    observation per key is by construction the cold one). The
+    cold-start wrapper knows which dispatches were cold, so the tap
+    subtracts its compile term before the calibrator sees them.
+
+    Shared by the fleet simulator and the live fleet: in the simulator
+    ``seconds`` is the modeled dispatch cost; live it is REAL measured
+    wall seconds (``t1 - t0`` around the actual kernel execution) — same
+    tap, same tables, which is what makes live-calibrated tables loadable
+    back into sim runs."""
+    if not isinstance(model, ColdStartCostModel):
+        return calibration.observe
+
+    def tap(batch, seconds, replica_id):
+        if model.dispatch_cold and model.dispatch_cold[-1]:
+            seconds -= model.compile_s
+        calibration.observe(batch, seconds, replica_id)
+
+    return tap
 
 
 def fleet_capacity_hz(
@@ -231,23 +263,7 @@ class FleetSimulator:
         return pump
 
     def _calibration_tap(self, model):
-        """Dispatch tap that fits WARM costs: a cold dispatch's measured
-        seconds include the one-off compile term, and folding that into
-        the table would make a replica price a key HIGHER right after
-        compiling it (inverting warm-cache affinity — the first
-        observation per key is by construction the cold one). The
-        cold-start wrapper knows which dispatches were cold, so the tap
-        subtracts its compile term before the calibrator sees them."""
-        calibration = self.calibration
-        if not isinstance(model, ColdStartCostModel):
-            return calibration.observe
-
-        def tap(batch, seconds, replica_id):
-            if model.dispatch_cold and model.dispatch_cold[-1]:
-                seconds -= model.compile_s
-            calibration.observe(batch, seconds, replica_id)
-
-        return tap
+        return calibration_tap(self.calibration, model)
 
     def _apply_autoscale(self, now: float) -> None:
         scaler = self.autoscaler
@@ -259,9 +275,10 @@ class FleetSimulator:
                 t_s=now, action="up", replica_id=p.replica_id,
                 active=len(self.active), signal=signal))
         while len(self.active) > max(target, 1):
-            # retire the newest replica: keeps the longest-warmed caches
-            # alive and makes up/down sequences deterministic
-            p = self.active.pop()
+            # retire the cheapest-to-drain replica (backlog seconds priced
+            # via its own table); ties retire the newest, keeping the
+            # longest-warmed caches alive — deterministic either way
+            p = self.active.pop(pick_scale_down(self.active, now))
             self._retired.append(p)
             self.scale_events.append(ScaleEvent(
                 t_s=now, action="down", replica_id=p.replica_id,
@@ -269,35 +286,16 @@ class FleetSimulator:
 
     # ------------------------------------------------------------ event loop
     def _drain_until(self, t_limit: float) -> None:
-        """Merged global timeline: pump whichever replica ripens earliest,
-        repeatedly, until no replica ripens before ``t_limit``. Covers ALL
-        replicas — a scaled-down replica no longer receives arrivals but
-        still drains what it owns.
-
-        A replica whose ripeness estimate fails to dispatch (slack-aware
-        window shrank underneath it) is stalled until the next arrival —
-        the same per-replica semantics as the solo drain loop, without
-        letting one stalled replica block the others.
-        """
+        """Merged global timeline (``repro.core.pump.drain_merged``) over
+        ALL replicas that can still ripen — a scaled-down replica no
+        longer receives arrivals but still drains what it owns."""
         # a retired replica with a dry queue can never ripen again; skip
         # it so heavy autoscale cycling doesn't grow the per-event scan
         pumps = self.active
         if self._retired:
             pumps = pumps + [p for p in self._retired
                              if len(p.scheduler.queue)]
-        stalled = 0  # bitmask — replica counts are small
-        while True:
-            best_i, best_t = -1, t_limit
-            for i, p in enumerate(pumps):
-                if stalled & (1 << i):
-                    continue
-                t = p.next_ripe_time()
-                if t is not None and t < best_t:
-                    best_i, best_t = i, t
-            if best_i < 0:
-                return
-            if not pumps[best_i].pump_at(best_t):
-                stalled |= 1 << best_i
+        drain_merged(pumps, t_limit)
 
     def run(self, trace: Union[Trace, Iterable[Arrival]]) -> FleetMetrics:
         if self.workers > 1:
@@ -333,14 +331,7 @@ class FleetSimulator:
         # tail: keep merging ripeness instants until every queue is dry,
         # then force-flush whatever the estimates could not ripen
         pumps = self.pumps
-        while any(len(p.scheduler.queue) for p in pumps):
-            before = sum(len(p.scheduler.queue) for p in pumps)
-            self._drain_until(float("inf"))
-            if sum(len(p.scheduler.queue) for p in pumps) == before:
-                for p in pumps:
-                    if len(p.scheduler.queue):
-                        p._absorb(p.scheduler.flush())
-                break
+        drain_fleet_tail(pumps, self._drain_until)
 
         # fleet horizon: the makespan across replicas that actually
         # dispatched; every replica's utilization is reported against it

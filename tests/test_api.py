@@ -172,9 +172,22 @@ class TestValidation:
         with pytest.raises(ValueError, match="known"):
             SystemSpec.from_dict({"wrkload": {}})
 
-    def test_live_fleet_rejected(self):
-        with pytest.raises(ValueError, match="live"):
-            SystemSpec(mode="live", fleet=FleetSpec(replicas=2))
+    def test_live_fleet_builds(self):
+        # live fleets are real now: N engines behind the sim routers
+        run = SystemSpec(mode="live", fleet=FleetSpec(replicas=2)).build()
+        assert run.executor == "live"
+
+    def test_live_rejects_sharded_workers(self):
+        with pytest.raises(ValueError, match="workers"):
+            SystemSpec(mode="live",
+                       fleet=FleetSpec(replicas=2, workers=2))
+
+    def test_live_rejects_autoscale(self):
+        from repro.api.spec import AutoscaleSpec
+        with pytest.raises(ValueError, match="autoscale"):
+            SystemSpec(mode="live",
+                       fleet=FleetSpec(replicas=1,
+                                       autoscale=AutoscaleSpec()))
 
     def test_calibrated_over_hetero_specs_rejected(self):
         # heterogeneous replicas price through per-hardware rooflines; a

@@ -217,11 +217,14 @@ class TestConfigValidation:
         with pytest.raises(ValueError, match="oversubscription"):
             ScheduleConfig(oversubscription=0.9)
 
-    def test_live_mode_rejects_feasibility(self):
-        with pytest.raises(ValueError, match="admission_policy"):
-            SystemSpec(mode="live",
-                       scheduler=SchedulerSpec(
-                           admission_policy="feasibility")).build()
+    def test_live_mode_accepts_feasibility(self):
+        # live replicas run the same scheduler core as the simulator, so
+        # feasibility admission is now valid there (it needs the spec's
+        # cost model, which the live fleet builds per replica)
+        run = SystemSpec(mode="live",
+                         scheduler=SchedulerSpec(
+                             admission_policy="feasibility")).build()
+        assert run.executor == "live"
 
     def test_sharded_fleet_rejects_feasibility(self):
         from repro.api.spec import FleetSpec

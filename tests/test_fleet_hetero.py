@@ -151,6 +151,49 @@ class TestHeterogeneousFleet:
         assert _hetero(seed=7).to_json() == _hetero(seed=7).to_json()
 
 
+# --------------------------------------------------------------- scale-down
+class TestScaleDown:
+    def _replica(self, backlog):
+        return types.SimpleNamespace(backlog_s=lambda now: backlog)
+
+    def test_retires_cheapest_drainer(self):
+        from repro.sim.autoscale import pick_scale_down
+
+        replicas = [self._replica(0.5), self._replica(0.01),
+                    self._replica(0.2)]
+        assert pick_scale_down(replicas, 0.0) == 1
+
+    def test_equal_costs_retire_newest(self):
+        # the historical tie-break: idle fleets (all-zero backlogs) keep
+        # retiring the NEWEST replica, preserving warmed caches and the
+        # pre-cost-aware scale-event timelines
+        from repro.sim.autoscale import pick_scale_down
+
+        replicas = [self._replica(0.0)] * 4
+        assert pick_scale_down(replicas, 0.0) == 3
+        mixed = [self._replica(0.1), self._replica(0.0),
+                 self._replica(0.1), self._replica(0.0)]
+        assert pick_scale_down(mixed, 0.0) == 3
+
+    def test_fleet_retires_loaded_replica_last(self):
+        # one busy replica + idle newer ones: scale-down must not pick
+        # the busy one even though cost-unaware retire-newest never would
+        # either; reverse the load so the NEWEST is the busy one
+        fleet = FleetSimulator(3, schedule=SCHED, cost_model=
+                               RooflineCostModel(strategy="space_time"),
+                               compile_s=0.0, autoscaler=_scaler(),
+                               start_s=0.0)
+        w = SimWorkload(MIX[0], MIX[0].cost)
+        newest = fleet.active[2]
+        for _ in range(50):
+            newest.scheduler.submit(SimWorkload(MIX[0], MIX[0].cost),
+                                    now=0.0)
+            newest.pending_est_s += newest.estimate_item_s(w)
+        from repro.sim.autoscale import pick_scale_down
+
+        assert pick_scale_down(fleet.active, 0.0) != 2
+
+
 # --------------------------------------------------------------- autoscaler
 class TestAutoscaler:
     def test_validation(self):
