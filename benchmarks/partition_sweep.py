@@ -1,0 +1,196 @@
+"""Fractional-share sweep: knee-planned partitions vs whole-chip
+space-only and time-only on the paper SGEMM mix.
+
+Every cell is a ``SystemSpec`` over the paper's three-shape SGEMM mix at
+the same capacity-anchored offered load (``rho`` prices against the
+whole chip's space_time capacity regardless of the cell's strategy, so
+all cells face identical arrival streams). The partition cells run the
+deterministic knee planner (``repro.partition``): one slice per shape
+bucket, sized at its throughput knee and floored by deadline
+feasibility, with batch windows co-optimized — co-located slices then
+execute CONCURRENTLY on the chip's timeline, which is the fractional
+generalization of the paper's space-only strategy. The baselines run
+the whole chip under the classic ``space_only`` / ``time_only`` cost
+strategies.
+
+A re-planning cell (``replan_interval_s > 0``) re-runs the planner from
+each slice's observed merged batch size mid-run; its assign/replan
+timeline lands in the metrics JSON and the Perfetto trace. An explicit
+equal-shares cell covers ``policy="explicit"``.
+
+``--check`` (the CI ``partition-gate``) asserts:
+
+  1. knee-planned goodput STRICTLY beats whole-chip space_only AND
+     time_only (the tentpole ordering);
+  2. the plan is sane: shares sum to <= 1.0 and the partition section is
+     echoed in the metrics JSON;
+  3. same-seed reruns are byte-identical — metrics JSON AND the exported
+     Chrome trace bytes (partition events included);
+  4. recorder-on metrics JSON == recorder-off metrics JSON.
+
+The committed baseline is refreshed with the SAME arguments CI uses:
+
+    PYTHONPATH=src python benchmarks/partition_sweep.py --events 30000 \
+        --json benchmarks/baselines/BENCH_baseline_partition_sweep.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.api import PartitionSpec, SystemSpec, WorkloadSpec
+from repro.sim import to_bench_json
+
+BASELINES = ("space_only", "time_only")
+
+
+def _spec(events: int, tenants: int, seed: int, rho: float,
+          partition: Optional[PartitionSpec] = None,
+          strategy: str = "space_time") -> SystemSpec:
+    return SystemSpec(
+        workload=WorkloadSpec(mix="sgemm", tenants=tenants, events=events,
+                              seed=seed, rho=rho),
+        partition=partition,
+    ).replace(**{"cost_model.strategy": strategy})
+
+
+def run(events: int = 200_000, tenants: int = 6, seed: int = 0,
+        rho: float = 1.1, check: bool = False,
+        json_path: Optional[str] = None) -> Dict:
+    t_wall = time.perf_counter()
+    sections: Dict = {}
+    failures: List[str] = []
+
+    print(f"\n=== partition_sweep: {events} events/cell, sgemm mix, "
+          f"tenants={tenants}, rho={rho}, seed={seed} ===")
+
+    cells = {
+        "knee": _spec(events, tenants, seed, rho,
+                      partition=PartitionSpec(policy="knee")),
+        "knee_replan": _spec(events, tenants, seed, rho,
+                             partition=PartitionSpec(
+                                 policy="knee", replan_interval_s=0.01)),
+        "explicit_thirds": _spec(
+            events, tenants, seed, rho,
+            partition=PartitionSpec(
+                policy="explicit",
+                shares=(1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0))),
+        "space_only": _spec(events, tenants, seed, rho,
+                            strategy="space_only"),
+        "time_only": _spec(events, tenants, seed, rho,
+                           strategy="time_only"),
+    }
+
+    print(f"{'cell':16s} {'goodput':>12s} {'attain':>7s} {'p95 ms':>9s} "
+          f"{'util':>6s} {'slices':>7s}")
+    goodput: Dict[str, float] = {}
+    for name, spec in cells.items():
+        m = spec.build().run_metrics()
+        sections[name] = m
+        s = m.summary()
+        goodput[name] = s["goodput_cost_per_s"]
+        part = getattr(m, "partition", None)
+        slices = (len(part["plan"]["groups"]) if part else 1)
+        print(f"{name:16s} {s['goodput_cost_per_s']:12.4g} "
+              f"{s['slo_attainment']:7.4f} {s['p95_s']*1e3:9.3f} "
+              f"{s['utilization']:6.3f} {slices:7d}")
+
+    # ------------------------------------------------------- plan sanity
+    knee_m = sections["knee"]
+    plan = knee_m.partition["plan"]
+    total = sum(g["share"] for g in plan["groups"])
+    print(f"\nknee plan: " + ", ".join(
+        f"{g['name']}={g['share']:.3f}" for g in plan["groups"])
+        + f" (sum {total:.3f})")
+    if total > 1.0 + 1e-9:
+        failures.append(f"knee plan shares sum to {total:.6f} > 1.0")
+    if "partition" not in json.loads(knee_m.to_json()):
+        failures.append("partition section missing from metrics JSON")
+    replans = [e for e in sections["knee_replan"].partition["events"]
+               if e["action"] == "replan"]
+    print(f"replan cell: {len(replans)} mid-run share change(s)")
+
+    # --------------------------------------------------- tentpole ordering
+    for baseline in BASELINES:
+        ok = goodput["knee"] > goodput[baseline]
+        print(f"knee > {baseline}: {ok} "
+              f"({goodput['knee']:.4g} vs {goodput[baseline]:.4g})")
+        if not ok:
+            failures.append(
+                f"knee goodput {goodput['knee']:.6g} does not beat "
+                f"{baseline} {goodput[baseline]:.6g}")
+
+    # ------------------------------------------- determinism + recorder-off
+    # headline knee cell: same-seed rerun byte-identical, recorder-on must
+    # not perturb the metrics, and two recorder-on runs must export
+    # byte-identical Chrome trace JSON (partition events and all)
+    rerun = cells["knee"].build().run_metrics()
+    if rerun.to_json() != knee_m.to_json():
+        failures.append("same-seed rerun of knee cell not byte-identical")
+    from repro.obs.trace_export import export_chrome_trace
+
+    traced = cells["knee"].replace(**{"observability.enabled": True})
+    runs = []
+    for _ in range(2):
+        r = traced.build()
+        m = r.run_metrics()
+        runs.append((m, export_chrome_trace(r.last_recorder)))
+    if runs[0][0].to_json() != knee_m.to_json():
+        failures.append("recorder-on metrics differ from recorder-off")
+    if runs[0][1] != runs[1][1]:
+        failures.append("same-seed recorder trace bytes not identical")
+    n_part_events = runs[0][1].count('"cat":"partition"')
+    print(f"\ndeterminism: rerun byte-identical, trace "
+          f"{len(runs[0][1])} bytes stable ({n_part_events} partition "
+          f"events), recorder-off == recorder-on")
+    if n_part_events < len(plan["groups"]):
+        failures.append(
+            f"trace carries {n_part_events} partition events, expected at "
+            f"least one assign per slice ({len(plan['groups'])})")
+
+    # ---------------------------------------------------------------- output
+    if json_path:
+        doc = json.loads(to_bench_json(
+            "partition_sweep", sections,
+            extra={"events": events, "tenants": tenants, "seed": seed,
+                   "rho": rho, "knee_plan": plan,
+                   "replan_events": len(replans)}))
+        with open(json_path, "w") as fh:
+            fh.write(json.dumps(doc, indent=2, sort_keys=True))
+        print(f"wrote {json_path}")
+
+    print(f"\ntotal wall time: {time.perf_counter() - t_wall:.1f}s")
+    if failures:
+        for f in failures:
+            print(f"CHECK FAILED: {f}", file=sys.stderr)
+        if check:
+            sys.exit(1)
+    elif check:
+        print("checks passed: knee-planned fractional shares beat "
+              "whole-chip space_only and time_only goodput; plan sums to "
+              "<= 1.0; reruns byte-identical including recorder trace bytes")
+    return sections
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--events", type=int, default=200_000,
+                    help="arrivals per cell")
+    ap.add_argument("--tenants", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rho", type=float, default=1.1,
+                    help="offered load / whole-chip space_time capacity")
+    ap.add_argument("--json", default=None, help="write BENCH-style JSON here")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the partition orderings hold")
+    args = ap.parse_args()
+    run(events=args.events, tenants=args.tenants, seed=args.seed,
+        rho=args.rho, check=args.check, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,18 @@
-"""Benchmark driver: one function per paper table/figure.
+"""Benchmark driver: one registry entry per paper table/figure.
+
+Spec-driven: ``BENCHMARKS`` below is the single source of truth — each
+entry names a section and a thunk that runs it (full or ``--quick``
+arguments), so adding a benchmark is one registry line and ``--only``
+/ ``--list`` derive their vocabulary from the registry instead of a
+hand-maintained if-chain.
 
 Prints human-readable sections followed by a machine-readable CSV block
 (``name,us_per_call,derived``). Usage:
 
-    PYTHONPATH=src python -m benchmarks.run           # everything
-    PYTHONPATH=src python -m benchmarks.run --quick   # reduced sweeps
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run --quick      # reduced sweeps
+    PYTHONPATH=src python -m benchmarks.run --list       # registry
+    PYTHONPATH=src python -m benchmarks.run --only partition,fleet
 """
 
 from __future__ import annotations
@@ -12,65 +20,138 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+from typing import Callable, List, Tuple
+
+# name -> (description, runner(quick, csv_rows)); registration order is
+# execution order
+BENCHMARKS: List[Tuple[str, str, Callable]] = []
+
+
+def _register(name: str, description: str):
+    def deco(fn):
+        BENCHMARKS.append((name, description, fn))
+        return fn
+    return deco
+
+
+@_register("table1", "SGEMM merge speedups (paper Table 1)")
+def _table1(quick: bool, csv_rows: list) -> None:
+    from benchmarks import table1_sgemm
+    r_sweep = (2, 8, 32) if quick else (2, 4, 8, 16, 32)
+    table1_sgemm.run(r_sweep=r_sweep, reps=3 if quick else 5,
+                     csv_rows=csv_rows)
+
+
+@_register("fig2", "batch-size sweep (paper Fig. 2)")
+def _fig2(quick: bool, csv_rows: list) -> None:
+    from benchmarks import fig2_batch_sweep
+    fig2_batch_sweep.run(csv_rows=csv_rows)
+
+
+@_register("fig3", "latency distributions (paper Fig. 3)")
+def _fig3(quick: bool, csv_rows: list) -> None:
+    from benchmarks import fig3_latency
+    fig3_latency.run(csv_rows=csv_rows)
+
+
+@_register("fig4", "predictability (paper Fig. 4)")
+def _fig4(quick: bool, csv_rows: list) -> None:
+    from benchmarks import fig4_predictability
+    fig4_predictability.run(csv_rows=csv_rows)
+
+
+@_register("fig5", "replica packing (paper Fig. 5)")
+def _fig5(quick: bool, csv_rows: list) -> None:
+    from benchmarks import fig5_replicas
+    fig5_replicas.run(csv_rows=csv_rows)
+
+
+@_register("trace", "dynamic trace scheduling policies")
+def _trace(quick: bool, csv_rows: list) -> None:
+    from benchmarks import dynamic_trace
+    dynamic_trace.run_all_policies(num_events=80 if quick else 200,
+                                   csv_rows=csv_rows)
+
+
+@_register("sim", "solo simulator strategy sweep")
+def _sim(quick: bool, csv_rows: list) -> None:
+    from benchmarks import sim_sweep
+    sim_sweep.run(events=20_000 if quick else 200_000, csv_rows=csv_rows)
+
+
+@_register("fleet", "fleet router sweep")
+def _fleet(quick: bool, csv_rows: list) -> None:
+    from benchmarks import fleet_sweep
+    fleet_sweep.run(events=5_000 if quick else 20_000, csv_rows=csv_rows)
+
+
+@_register("hetero", "heterogeneous + autoscaled fleets")
+def _hetero(quick: bool, csv_rows: list) -> None:
+    from benchmarks import fleet_sweep
+    fleet_sweep.run_hetero(events=5_000 if quick else 20_000,
+                           autoscale=True, csv_rows=csv_rows)
+
+
+@_register("deadline", "EDF vs fixed vs slo_adaptive under overload")
+def _deadline(quick: bool, csv_rows: list) -> None:
+    from benchmarks import deadline_sweep
+    sections = deadline_sweep.run(events=30_000 if quick else 1_000_000)
+    for name, m in sections.items():
+        csv_rows.extend(m.bench_rows(f"deadline/{name}"))
+
+
+@_register("partition", "knee-planned fractional shares vs whole chip")
+def _partition(quick: bool, csv_rows: list) -> None:
+    from benchmarks import partition_sweep
+    sections = partition_sweep.run(events=30_000 if quick else 200_000)
+    for name, m in sections.items():
+        csv_rows.extend(m.bench_rows(f"partition/{name}"))
+
+
+@_register("speed", "simulator events/sec throughput")
+def _speed(quick: bool, csv_rows: list) -> None:
+    from benchmarks import sim_speed
+    sim_speed.run(events=100_000 if quick else 1_000_000,
+                  fleet_events=100_000 if quick else 2_000_000,
+                  repeats=1 if quick else 3, csv_rows=csv_rows)
+
+
+@_register("roofline", "hardware roofline report")
+def _roofline(quick: bool, csv_rows: list) -> None:
+    from benchmarks import roofline_report
+    roofline_report.run(csv_rows=csv_rows)
+    roofline_report.run(mesh="pod2", csv_rows=csv_rows)
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    names = [name for name, _, _ in BENCHMARKS]
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--quick", action="store_true", help="reduced sweeps")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: table1,fig2,fig3,fig4,fig5,trace,sim,fleet,hetero,roofline,speed")
+                    help="comma-separated subset of: " + ",".join(names))
+    ap.add_argument("--list", action="store_true",
+                    help="print the registry and exit")
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
 
-    def want(name: str) -> bool:
-        return only is None or name in only
+    if args.list:
+        for name, description, _ in BENCHMARKS:
+            print(f"{name:12s} {description}")
+        return
 
-    csv_rows = []
+    only = None
+    if args.only:
+        only = set(args.only.split(","))
+        unknown = sorted(only - set(names))
+        if unknown:
+            print(f"unknown benchmark(s) {unknown} (have: {names})",
+                  file=sys.stderr)
+            sys.exit(2)
+
+    csv_rows: list = []
     t0 = time.time()
-
-    from benchmarks import (
-        dynamic_trace,
-        fig2_batch_sweep,
-        fig3_latency,
-        fig4_predictability,
-        fig5_replicas,
-        fleet_sweep,
-        roofline_report,
-        sim_speed,
-        sim_sweep,
-        table1_sgemm,
-    )
-
-    if want("table1"):
-        r_sweep = (2, 8, 32) if args.quick else (2, 4, 8, 16, 32)
-        table1_sgemm.run(r_sweep=r_sweep, reps=3 if args.quick else 5, csv_rows=csv_rows)
-    if want("fig2"):
-        fig2_batch_sweep.run(csv_rows=csv_rows)
-    if want("fig3"):
-        fig3_latency.run(csv_rows=csv_rows)
-    if want("fig4"):
-        fig4_predictability.run(csv_rows=csv_rows)
-    if want("fig5"):
-        fig5_replicas.run(csv_rows=csv_rows)
-    if want("trace"):
-        dynamic_trace.run_all_policies(
-            num_events=80 if args.quick else 200, csv_rows=csv_rows)
-    if want("sim"):
-        sim_sweep.run(events=20_000 if args.quick else 200_000,
-                      csv_rows=csv_rows)
-    if want("fleet"):
-        fleet_sweep.run(events=5_000 if args.quick else 20_000,
-                        csv_rows=csv_rows)
-    if want("hetero"):
-        fleet_sweep.run_hetero(events=5_000 if args.quick else 20_000,
-                               autoscale=True, csv_rows=csv_rows)
-    if want("speed"):
-        sim_speed.run(events=100_000 if args.quick else 1_000_000,
-                      fleet_events=100_000 if args.quick else 2_000_000,
-                      repeats=1 if args.quick else 3, csv_rows=csv_rows)
-    if want("roofline"):
-        roofline_report.run(csv_rows=csv_rows)
-        roofline_report.run(mesh="pod2", csv_rows=csv_rows)
+    for name, _, runner in BENCHMARKS:
+        if only is None or name in only:
+            runner(args.quick, csv_rows)
 
     print(f"\n=== CSV (name,us_per_call,derived) — total {time.time()-t0:.0f}s ===")
     for name, us, derived in csv_rows:

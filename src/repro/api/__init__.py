@@ -14,6 +14,7 @@ from repro.api.build import (  # noqa: F401
     SimRun,
     build_cost_model,
     build_mix,
+    build_partition,
     build_schedule,
     build_trace,
     resolve_rate_hz,
@@ -25,11 +26,13 @@ from repro.api.spec import (  # noqa: F401
     COST_KINDS,
     MIXES,
     MODES,
+    PARTITION_POLICIES,
     PROCESSES,
     AutoscaleSpec,
     CostModelSpec,
     FleetSpec,
     ObservabilitySpec,
+    PartitionSpec,
     RouterSpec,
     SchedulerSpec,
     SystemSpec,

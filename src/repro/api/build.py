@@ -138,7 +138,12 @@ def build_cost_model(cost: CostModelSpec) -> Callable[[Sequence], float]:
     if cost.kind == "roofline":
         return prior
     try:
-        return CalibratedCostModel.load(cost.calibration_path, prior=prior)
+        # spec-level prior_strength > 0 wins; 0 (the default) defers to
+        # whatever the saved table carries
+        return CalibratedCostModel.load(
+            cost.calibration_path, prior=prior,
+            prior_strength=(cost.prior_strength
+                            if cost.prior_strength > 0 else None))
     except FileNotFoundError:
         raise ValueError(
             f"calibration table not found: {cost.calibration_path!r} "
@@ -169,6 +174,64 @@ def build_fleet_calibration(cost: CostModelSpec) -> Optional[FleetCalibrator]:
 
 def build_schedule(spec: SystemSpec) -> Optional[ScheduleConfig]:
     return spec.scheduler.to_schedule_config() if spec.scheduler else None
+
+
+# ---------------------------------------------------------------- partition
+def build_partition(spec: SystemSpec, mix: Sequence[TenantSpec]):
+    """``(plan, replanner)`` for a partitioned spec, ``(None, None)``
+    otherwise.
+
+    ``policy="explicit"`` maps ``shares`` verbatim to slices named
+    ``p0..pN`` with tenants dealt round-robin. ``policy="knee"`` runs the
+    deterministic planner (``repro.partition.planner``) over the mix —
+    priced from the calibrated table when the spec's cost model is
+    calibrated, the roofline otherwise. The returned ``replanner`` maps
+    ``{group: observed_R} -> PartitionPlan`` and backs mid-run
+    re-planning (``replan_interval_s > 0``).
+    """
+    p = spec.partition
+    if p is None:
+        return None, None
+    from repro.partition import (
+        DEFAULT_SHARE_GRID,
+        PartitionPlan,
+        PartitionShare,
+        PlannerConfig,
+        plan_partitions,
+    )
+
+    cost = spec.cost_model
+    if p.policy == "explicit":
+        shares = p.shares
+        g = len(shares)
+        plan = PartitionPlan(groups=tuple(
+            PartitionShare(
+                name=f"p{i}", share=s,
+                tenants=tuple(t for t in range(spec.workload.tenants)
+                              if t % g == i))
+            for i, s in enumerate(shares)))
+        return plan, None
+
+    schedule = build_schedule(spec) or ScheduleConfig()
+    cfg = PlannerConfig(
+        share_grid=p.share_grid or DEFAULT_SHARE_GRID,
+        knee_fraction=p.knee_fraction,
+        min_share=p.min_share,
+        base_window_s=schedule.batching_window_s,
+        slack_fraction=p.slack_fraction,
+        merge_size=schedule.max_superkernel_size,
+        strategy=cost.strategy,
+        small_kernel_efficiency=cost.small_kernel_efficiency,
+    )
+    hardware = resolve_spec(cost.hardware)
+    model = build_cost_model(cost)
+    calibrated = model if isinstance(model, CalibratedCostModel) else None
+
+    def replanner(r_override):
+        return plan_partitions(mix, hardware, cfg, calibrated=calibrated,
+                               r_override=r_override)
+
+    return replanner(None), replanner
 
 
 # ------------------------------------------------------------ observability
@@ -286,11 +349,13 @@ class FleetRun:
         mix = build_mix(spec.workload)
         trace = build_trace(spec, mix)
         rec = build_recorder(spec)
+        plan, replanner = build_partition(spec, mix)
         sim = FleetSimulator(
             replicas=fleet.replicas,
             router=spec.router.policy,
             schedule=build_schedule(spec),
-            cost_model=None if fleet.specs else build_cost_model(cost),
+            cost_model=(None if (fleet.specs or plan is not None)
+                        else build_cost_model(cost)),
             compile_s=cost.compile_us * 1e-6,
             specs=list(fleet.specs) if fleet.specs else None,
             strategy=cost.strategy,
@@ -298,6 +363,13 @@ class FleetRun:
             calibration=build_fleet_calibration(cost),
             workers=fleet.workers,
             recorder=rec,
+            partition=plan,
+            partition_hardware=(resolve_spec(cost.hardware)
+                                if plan is not None else None),
+            small_kernel_efficiency=cost.small_kernel_efficiency,
+            replanner=replanner,
+            replan_interval_s=(spec.partition.replan_interval_s
+                               if spec.partition else 0.0),
         )
         metrics = sim.run(trace)
         self.last_recorder = rec

@@ -430,13 +430,26 @@ def cmd_check(args) -> int:
         print(f"  scheduler: window={sched.batching_window_s * 1e3:g}ms "
               f"({sched.batching_policy}), "
               f"max_superkernel_size={sched.max_superkernel_size}")
+    if spec.partition is not None:
+        from repro.api.build import build_partition
+
+        plan, _ = build_partition(spec, build_mix(w))
+        replan = (f", replan every {spec.partition.replan_interval_s:g}s"
+                  if spec.partition.replan_interval_s > 0 else "")
+        print(f"  partition: policy={spec.partition.policy}, "
+              f"{len(plan.groups)} slice(s) per replica{replan}")
+        for g in plan.groups:
+            win = (f", window={g.window_s * 1e3:g}ms"
+                   if g.window_s is not None else "")
+            print(f"    {g.name}: share={g.share:.4g} "
+                  f"tenants={list(g.tenants)}{win}")
     return 0
 
 
 # --------------------------------------------------------------------- specs
 def cmd_specs(args) -> int:
     from repro.launch.roofline import HARDWARE_SPECS
-    from repro.api.spec import AUTOSCALERS
+    from repro.api.spec import AUTOSCALERS, PARTITION_POLICIES
 
     doc = {
         "schema_version": SCHEMA_VERSION,
@@ -449,6 +462,7 @@ def cmd_specs(args) -> int:
         "routers": list(ROUTERS),
         "autoscalers": list(AUTOSCALERS),
         "strategies": list(STRATEGIES),
+        "partition_policies": list(PARTITION_POLICIES),
         "modes": list(MODES),
     }
     if args.json:
@@ -464,6 +478,8 @@ def cmd_specs(args) -> int:
                        ("routers (router.policy)", "routers"),
                        ("autoscalers (fleet.autoscale.policy)", "autoscalers"),
                        ("strategies (cost_model.strategy)", "strategies"),
+                       ("partition policies (partition.policy)",
+                        "partition_policies"),
                        ("modes (mode)", "modes")):
         print(f"{label}: {', '.join(doc[key])}")
     return 0

@@ -51,6 +51,7 @@ PROCESSES = ("poisson", "mmpp", "diurnal", "flash", "replay")
 MODES = ("sim", "live")
 COST_KINDS = ("roofline", "calibrated")
 AUTOSCALERS = ("backlog",)
+PARTITION_POLICIES = ("knee", "explicit")
 
 
 def _from_dict(cls, data, where: str):
@@ -308,6 +309,11 @@ class CostModelSpec:
     compile_us: float = 0.0
     calibration_path: Optional[str] = None
     ewma_alpha: float = 0.2
+    # Bayesian shrinkage toward the roofline prior for sparse calibrated
+    # keys: a fitted (bucket, R) cost observed n times prices as
+    # (n*fitted + k*prior)/(n + k) with k = prior_strength. 0 = off
+    # (fitted values win outright, the pre-shrinkage behavior).
+    prior_strength: float = 0.0
     # per-replica measured-cost tables (FleetCalibrator): fleet and live
     # runs LOAD this file when it exists (fresh replicas start from
     # persisted tables instead of cold EWMAs) and live runs SAVE the
@@ -328,6 +334,10 @@ class CostModelSpec:
                              f"{self.small_kernel_efficiency}")
         if self.compile_us < 0.0:
             raise ValueError(f"compile_us must be >= 0, got {self.compile_us}")
+        if self.prior_strength < 0.0:
+            raise ValueError(
+                f"prior_strength must be >= 0, got {self.prior_strength} "
+                "(pseudo-observations of the roofline prior)")
         if self.kind == "calibrated" and not self.calibration_path:
             raise ValueError(
                 'kind="calibrated" needs calibration_path (a table saved by '
@@ -346,6 +356,106 @@ class CostModelSpec:
     @classmethod
     def from_dict(cls, data: Dict) -> "CostModelSpec":
         return _from_dict(cls, data, "cost_model")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """Fractional spatial shares (``repro.partition``), declaratively.
+
+    ``policy="knee"`` runs the deterministic planner at build time: one
+    slice per workload bucket, sized at its throughput knee and grown
+    only as far as deadline feasibility demands, batch windows
+    co-optimized (``repro.partition.planner``). ``policy="explicit"``
+    takes ``shares`` verbatim — one fraction per slice, tenants assigned
+    round-robin (``tenant_id % len(shares)``).
+
+    Partitioning is simulator-only (real chips expose no share knob
+    here) and single-process; ``SystemSpec`` validates those pairings
+    eagerly. ``replan_interval_s > 0`` re-runs the planner at fixed
+    simulated intervals from each slice's OBSERVED mean merged batch
+    size, swapping slice sizes mid-run — every re-plan lands in the
+    metrics JSON and the flight-recorder timeline.
+    """
+
+    policy: str = "knee"
+    shares: Optional[Tuple[float, ...]] = None   # explicit: per-slice
+    share_grid: Optional[Tuple[float, ...]] = None  # knee: candidates
+    knee_fraction: float = 0.9
+    min_share: float = 0.0625
+    slack_fraction: float = 0.5
+    replan_interval_s: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.policy not in PARTITION_POLICIES:
+            raise ValueError(
+                f"unknown partition policy {self.policy!r} "
+                f"(have {PARTITION_POLICIES})")
+        if self.policy == "explicit" and not self.shares:
+            raise ValueError(
+                'partition.policy="explicit" needs shares (per-slice '
+                "fractions of one chip, e.g. [0.5, 0.25, 0.25])")
+        if self.policy == "knee" and self.shares is not None:
+            raise ValueError(
+                "partition.shares only applies to policy='explicit' "
+                "(the knee planner derives shares); drop shares or set "
+                "policy='explicit'")
+        if self.shares is not None:
+            shares = tuple(float(s) for s in self.shares)
+            object.__setattr__(self, "shares", shares)
+            for s in shares:
+                if not (0.0 < s <= 1.0):
+                    raise ValueError(
+                        f"partition shares must be in (0, 1], got {s}")
+            total = sum(shares)
+            if total > 1.0 + 1e-9:
+                raise ValueError(
+                    f"partition shares sum to {total:g} > 1.0; shares "
+                    f"are fractions of ONE chip — scale them down")
+        if self.share_grid is not None:
+            grid = tuple(float(s) for s in self.share_grid)
+            object.__setattr__(self, "share_grid", grid)
+            if not grid or any(not (0.0 < s <= 1.0) for s in grid) \
+                    or list(grid) != sorted(set(grid)):
+                raise ValueError(
+                    "partition.share_grid must be strictly ascending "
+                    f"fractions in (0, 1], got {list(grid)}")
+        if not (0.0 < self.knee_fraction <= 1.0):
+            raise ValueError(
+                f"partition.knee_fraction must be in (0, 1], got "
+                f"{self.knee_fraction}")
+        if not (0.0 < self.min_share <= 1.0):
+            raise ValueError(
+                f"partition.min_share must be in (0, 1], got "
+                f"{self.min_share}")
+        if not (0.0 <= self.slack_fraction <= 1.0):
+            raise ValueError(
+                f"partition.slack_fraction must be in [0, 1], got "
+                f"{self.slack_fraction}")
+        if self.replan_interval_s < 0.0:
+            raise ValueError(
+                f"partition.replan_interval_s must be >= 0, got "
+                f"{self.replan_interval_s}")
+
+    def to_dict(self) -> Dict:
+        return {
+            "policy": self.policy,
+            "shares": list(self.shares) if self.shares is not None else None,
+            "share_grid": (list(self.share_grid)
+                           if self.share_grid is not None else None),
+            "knee_fraction": self.knee_fraction,
+            "min_share": self.min_share,
+            "slack_fraction": self.slack_fraction,
+            "replan_interval_s": self.replan_interval_s,
+        }
+
+    @classmethod
+    def from_dict(cls, data: Dict) -> "PartitionSpec":
+        data = dict(data) if isinstance(data, dict) else data
+        if isinstance(data, dict):
+            for key in ("shares", "share_grid"):
+                if data.get(key) is not None:
+                    data[key] = tuple(data[key])
+        return _from_dict(cls, data, "partition")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -395,10 +505,35 @@ class SystemSpec:
     cost_model: CostModelSpec = dataclasses.field(default_factory=CostModelSpec)
     observability: ObservabilitySpec = dataclasses.field(
         default_factory=ObservabilitySpec)
+    # None = whole-chip execution; a PartitionSpec carves every replica
+    # into fractional spatial slices (repro.partition)
+    partition: Optional[PartitionSpec] = None
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
             raise ValueError(f"unknown mode {self.mode!r} (have {MODES})")
+        if self.partition is not None:
+            if self.mode == "live":
+                raise ValueError(
+                    "mode='live' cannot combine with partition: "
+                    "fractional spatial shares are a simulator-only "
+                    "resource model (no live slice API); use mode='sim'")
+            if self.fleet.workers > 1:
+                raise ValueError(
+                    "fleet.workers > 1 cannot combine with partition: "
+                    "co-located partition pumps share per-chip state the "
+                    "shard merge does not replay; set fleet.workers=1")
+            if self.fleet.autoscale is not None:
+                raise ValueError(
+                    "partition cannot combine with fleet.autoscale: the "
+                    "plan carves a fixed replica set and scale events "
+                    "would need mid-run re-planning (see ROADMAP); drop "
+                    "one")
+            if self.fleet.specs is not None:
+                raise ValueError(
+                    "partition cannot combine with fleet.specs: slices "
+                    "are carved from ONE base hardware "
+                    "(cost_model.hardware); drop fleet.specs")
         if self.mode == "live":
             # the live fleet runs the same PumpCore/router stack as the
             # simulator — replicas, hetero specs, feasibility admission
@@ -471,6 +606,7 @@ class SystemSpec:
             "scheduler": self.scheduler.to_dict() if self.scheduler else None,
             "cost_model": self.cost_model.to_dict(),
             "observability": self.observability.to_dict(),
+            "partition": self.partition.to_dict() if self.partition else None,
         }
 
     @classmethod
@@ -494,12 +630,15 @@ class SystemSpec:
             "scheduler": SchedulerSpec.from_dict,
             "cost_model": CostModelSpec.from_dict,
             "observability": ObservabilitySpec.from_dict,
+            "partition": PartitionSpec.from_dict,
         }
         for key, conv in converters.items():
             if isinstance(data.get(key), dict):
                 data[key] = conv(data[key])
         if data.get("scheduler") is None:
             data.pop("scheduler", None)
+        if data.get("partition") is None:
+            data.pop("partition", None)
         return _from_dict(cls, data, "spec")
 
     def to_json(self) -> str:
@@ -542,6 +681,7 @@ class SystemSpec:
                     defaults = {
                         "scheduler": SchedulerSpec,
                         "autoscale": AutoscaleSpec,
+                        "partition": PartitionSpec,
                     }.get(part)
                     if not isinstance(node, dict) or defaults is None:
                         raise ValueError(
@@ -566,7 +706,9 @@ class SystemSpec:
 
         if self.mode == "live":
             return LiveRun(self)
-        if self.fleet.is_fleet:
+        if self.partition is not None or self.fleet.is_fleet:
+            # a partitioned solo replica is still a fleet of co-located
+            # slice pumps sharing one chip's timeline
             return FleetRun(self)
         return SimRun(self)
 

@@ -76,6 +76,24 @@ class HardwareSpec:
             ici_bw=self.ici_bw * factor,
         )
 
+    def sliced(self, share: float, name: Optional[str] = None) -> "HardwareSpec":
+        """A fractional spatial partition of this chip: ``share`` of the
+        compute/memory/ICI roofs, full-price launch overheads.
+
+        ``scaled`` generalized from per-replica derating (a whole slower
+        chip) to per-partition slices of ONE chip: a tenant granted 25%
+        of the spatial units sees 25% of every roof, but still pays the
+        full ``dispatch_overhead_s`` and pipe fill per kernel launch —
+        the fixed terms that give throughput-vs-share curves their knee
+        (``repro.partition.knee``). Shares of co-located slices must sum
+        to <= 1.0; ``repro.partition.shares.PartitionPlan`` owns that
+        validation."""
+        if not (0.0 < share <= 1.0):
+            raise ValueError(
+                f"partition share must be in (0, 1], got {share} "
+                f"(a share is a fraction of one chip's spatial units)")
+        return self.scaled(share, name=name or f"{self.name}@{share:g}")
+
 
 TPU_V5E = HardwareSpec()
 

@@ -208,6 +208,7 @@ class FlightRecorder:
         self._rt_price = array("d")       # flat, row-major
         self._rt_price_rid = array("l")   # replica id per flat price
         self.scale_events: List[Dict] = []
+        self.partition_events: List[Dict] = []
 
     def shard(self, replica_id: int = 0) -> ReplicaShard:
         s = self.shards.get(replica_id)
@@ -232,13 +233,22 @@ class FlightRecorder:
             e.to_dict() if hasattr(e, "to_dict") else dict(e)
             for e in events]
 
+    def record_partition_events(self, events: Sequence) -> None:
+        """Partition assign/replan timeline (repro.partition): copied to
+        plain dicts like scale events, exported as instants on the
+        control track."""
+        self.partition_events = [
+            e.to_dict() if hasattr(e, "to_dict") else dict(e)
+            for e in events]
+
     @property
     def n_routes(self) -> int:
         return len(self._rt_t)
 
     def total_events(self) -> int:
         """Every recorded row, across shards and the fleet level."""
-        n = self.n_routes + len(self.scale_events)
+        n = self.n_routes + len(self.scale_events) \
+            + len(self.partition_events)
         for s in self.shards.values():
             n += (s.n_arrivals + s.n_dispatches + s.n_requests
                   + s.n_preemptions)

@@ -12,7 +12,8 @@ Perfetto (ui.perfetto.dev) and ``chrome://tracing`` load directly:
                         SLO-met in args, plus admission-rejection
                         instants ("i"): interference as it happens
     pid 3  "control"    router decisions (with the price vector that
-                        justified them) and autoscale events as instants
+                        justified them), autoscale events, and partition
+                        assign/replan events as instants
 
 Timestamps are microseconds (the format's unit); simulated seconds map
 as ``t_s * 1e6``. Export is a pure function of recorder contents built
@@ -33,6 +34,7 @@ PID_TENANTS = 2
 PID_CONTROL = 3
 _TID_ROUTER = 0
 _TID_AUTOSCALER = 1
+_TID_PARTITION = 2
 
 
 def _meta(pid: int, tid: int, name: str, value: str) -> Dict:
@@ -61,7 +63,7 @@ def chrome_trace_events(rec: FlightRecorder) -> List[Dict]:
     tenants.update(rec._rt_tenant)
     for t in sorted(tenants):
         add(_meta(PID_TENANTS, t, "thread_name", f"tenant {t}"))
-    if rec.n_routes or rec.scale_events:
+    if rec.n_routes or rec.scale_events or rec.partition_events:
         add(_meta(PID_CONTROL, 0, "process_name", "control"))
         if rec.n_routes:
             name = "router"
@@ -71,6 +73,9 @@ def chrome_trace_events(rec: FlightRecorder) -> List[Dict]:
         if rec.scale_events:
             add(_meta(PID_CONTROL, _TID_AUTOSCALER, "thread_name",
                       "autoscaler"))
+        if rec.partition_events:
+            add(_meta(PID_CONTROL, _TID_PARTITION, "thread_name",
+                      "partitioner"))
 
     # ------------------------------------------------- per-replica shards
     for rid in rids:
@@ -135,6 +140,10 @@ def chrome_trace_events(rec: FlightRecorder) -> List[Dict]:
         add({"ph": "i", "pid": PID_CONTROL, "tid": _TID_AUTOSCALER,
              "ts": ev["t_s"] * 1e6, "s": "p", "cat": "autoscale",
              "name": f"scale_{ev['action']}", "args": dict(ev)})
+    for ev in rec.partition_events:
+        add({"ph": "i", "pid": PID_CONTROL, "tid": _TID_PARTITION,
+             "ts": ev["t_s"] * 1e6, "s": "p", "cat": "partition",
+             "name": f"partition_{ev['action']}", "args": dict(ev)})
     return events
 
 

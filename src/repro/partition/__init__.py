@@ -1,0 +1,30 @@
+"""Fractional spatial shares as a first-class schedulable resource.
+
+The paper's headline wins come from treating the chip's spatial fraction
+as something the scheduler allocates; this package makes that fraction a
+planned quantity instead of the all-or-nothing strategies the cost
+models pick per batch:
+
+    shares.py   ``PartitionPlan`` — named per-partition slices of one
+                chip (``HardwareSpec.sliced``), tenants mapped to
+                slices, shares summing to <= 1.0
+    knee.py     throughput-vs-share curves per (bucket, R) priced from
+                the roofline or a calibrated table, and the D-STACK-style
+                knee share beyond which extra chip% buys ~nothing
+    planner.py  the deterministic planner that co-optimizes partition
+                sizes with batch windows, stopping a partition's shrink
+                where its deadline stops being feasible
+
+Execution lives in ``repro.sim.fleet`` (co-located partition pumps on
+one chip, one merged timeline); the declarative surface is
+``repro.api.spec.PartitionSpec``.
+"""
+
+from repro.partition.knee import (  # noqa: F401
+    DEFAULT_SHARE_GRID,
+    knee_share,
+    share_pricer,
+    throughput_curve,
+)
+from repro.partition.planner import PlannerConfig, plan_partitions  # noqa: F401
+from repro.partition.shares import PartitionPlan, PartitionShare  # noqa: F401

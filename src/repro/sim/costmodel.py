@@ -141,6 +141,18 @@ class RooflineCostModel:
         s = self.spec
         return max(s.t_compute(_flops(w)), s.t_memory(_bytes(w)))
 
+    def estimate_item_s(self, w, share: float = 1.0) -> float:
+        """Share-aware marginal: ``item_s`` when the tenant holds only a
+        ``share`` fraction of this chip. The marginal term is pure roof
+        (overheads are the batch's, not the item's) and roofs scale
+        linearly with the spatial share, so the fractional price is
+        exactly ``item_s / share`` — this is what feasibility admission
+        charges a tenant on a partition slice instead of assuming
+        whole-chip service (``repro.partition``)."""
+        if not (0.0 < share <= 1.0):
+            raise ValueError(f"share must be in (0, 1], got {share}")
+        return self.item_s(w) / share
+
 
 def batch_key(batch: Sequence) -> str:
     """Calibration key of one super-dispatch: (bucket, pow2-R) as a string.
@@ -171,17 +183,31 @@ class CalibratedCostModel:
     part of the persisted state: a loaded model resumes steady-state EWMA
     on its warm keys instead of letting one fresh sample overwrite a
     long-fitted value.
+
+    Calibration confidence: ``prior_strength`` (a pseudo-count ``k``,
+    default 0 = off) prices each fitted key as the count-weighted
+    Bayesian blend ``(n*fitted + k*prior) / (n + k)`` — a key seen once
+    stays near the analytical prior, a key seen hundreds of times is
+    essentially its measured value. Without it, knee curves fit from
+    thin tables are jagged: one noisy observation of a sparse
+    (bucket, R) key would swing the whole throughput-vs-share sweep
+    (``repro.partition.knee``).
     """
 
     def __init__(
         self,
         prior: Optional[Callable[[Sequence], float]] = None,
         ewma_alpha: float = 0.2,
+        prior_strength: float = 0.0,
     ):
         if not (0.0 < ewma_alpha <= 1.0):
             raise ValueError("ewma_alpha must be in (0, 1]")
+        if prior_strength < 0.0:
+            raise ValueError(
+                f"prior_strength must be >= 0, got {prior_strength}")
         self.prior = prior or RooflineCostModel()
         self.alpha = ewma_alpha
+        self.prior_strength = float(prior_strength)
         self.table: Dict[str, float] = {}
         self.counts: Dict[str, int] = {}
 
@@ -206,10 +232,15 @@ class CalibratedCostModel:
 
     # --------------------------------------------------------------- pricing
     def __call__(self, batch: Sequence) -> float:
-        fitted = self.table.get(batch_key(batch))
-        if fitted is not None:
+        key = batch_key(batch)
+        fitted = self.table.get(key)
+        if fitted is None:
+            return self.prior(batch)
+        k = self.prior_strength
+        if k <= 0.0:
             return fitted
-        return self.prior(batch)
+        n = self.counts.get(key, 1)
+        return (n * fitted + k * self.prior(batch)) / (n + k)
 
     def coverage(self, batch: Sequence) -> bool:
         """True if this batch would be priced from data, not the prior."""
@@ -226,14 +257,44 @@ class CalibratedCostModel:
             return prior_item(w)
         return self((w,))
 
+    def estimate_item_s(self, w, share: float = 1.0) -> float:
+        """Share-aware marginal seconds (the ``repro.partition``
+        surface): the marginal term is pure roof, so it scales as
+        ``1/share`` regardless of whether the solo estimate came from
+        the prior or a fitted table."""
+        if not (0.0 < share <= 1.0):
+            raise ValueError(f"share must be in (0, 1], got {share}")
+        return self.item_s(w) / share
+
+    def dispatch_share_s(self, batch: Sequence, share: float = 1.0) -> float:
+        """Whole-dispatch seconds when the batch runs on a ``share``
+        fraction of the chip: the blended fitted-or-prior whole-chip
+        seconds decomposed into fixed launch overhead (dispatch + pipe
+        fill, paid at full price on any slice) plus a roof-bound
+        remainder that scales as ``1/share`` — how knee curves price
+        shares from calibrated tables without per-share measurements."""
+        if not (0.0 < share <= 1.0):
+            raise ValueError(f"share must be in (0, 1], got {share}")
+        t_full = self(batch)
+        if share >= 1.0:
+            return t_full
+        spec = getattr(self.prior, "spec", None)
+        overhead = (spec.dispatch_overhead_s + spec.pipe_fill_s()
+                    if spec is not None else 0.0)
+        scalable = max(t_full - overhead, 0.0)
+        return min(t_full, overhead) + scalable / share
+
     # ----------------------------------------------------------- persistence
     def to_json(self) -> str:
-        return json.dumps(
-            {"ewma_alpha": self.alpha,
-             "entries": {k: {"seconds": self.table[k],
-                             "observations": self.counts.get(k, 0)}
-                         for k in sorted(self.table)}},
-            indent=2, sort_keys=True)
+        doc = {"ewma_alpha": self.alpha,
+               "entries": {k: {"seconds": self.table[k],
+                               "observations": self.counts.get(k, 0)}
+                           for k in sorted(self.table)}}
+        if self.prior_strength > 0.0:
+            # only when set: tables written with the default stay
+            # byte-identical to pre-shrinkage builds
+            doc["prior_strength"] = self.prior_strength
+        return json.dumps(doc, indent=2, sort_keys=True)
 
     def save(self, path: str) -> None:
         tmp = path + ".tmp"
@@ -244,9 +305,13 @@ class CalibratedCostModel:
     @classmethod
     def from_json(cls, text: str,
                   prior: Optional[Callable[[Sequence], float]] = None,
+                  prior_strength: Optional[float] = None,
                   ) -> "CalibratedCostModel":
         data = json.loads(text)
-        model = cls(prior=prior, ewma_alpha=data.get("ewma_alpha", 0.2))
+        strength = (data.get("prior_strength", 0.0)
+                    if prior_strength is None else prior_strength)
+        model = cls(prior=prior, ewma_alpha=data.get("ewma_alpha", 0.2),
+                    prior_strength=strength)
         for key, entry in data.get("entries", {}).items():
             model.table[key] = float(entry["seconds"])
             model.counts[key] = int(entry.get("observations", 1))
@@ -255,9 +320,11 @@ class CalibratedCostModel:
     @classmethod
     def load(cls, path: str,
              prior: Optional[Callable[[Sequence], float]] = None,
+             prior_strength: Optional[float] = None,
              ) -> "CalibratedCostModel":
         with open(path) as fh:
-            return cls.from_json(fh.read(), prior=prior)
+            return cls.from_json(fh.read(), prior=prior,
+                                 prior_strength=prior_strength)
 
 
 class FleetCalibrator:

@@ -49,7 +49,8 @@ as the solo simulator.
 
 from __future__ import annotations
 
-from typing import Callable, Iterable, List, Optional, Sequence, Union
+import dataclasses
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -71,6 +72,7 @@ from repro.sim.costmodel import (
     resolve_spec,
 )
 from repro.obs.recorder import route_price_vector
+from repro.partition.shares import PartitionPlan
 from repro.sim.metrics import FleetMetrics, MetricsAccumulator
 from repro.sim.router import Router, make_router
 from repro.sim.simulator import ReplicaPump, SimWorkload
@@ -183,6 +185,12 @@ class FleetSimulator:
         calibration: Optional[FleetCalibrator] = None,
         workers: int = 1,
         recorder=None,
+        partition: Optional[PartitionPlan] = None,
+        partition_hardware: Optional[HardwareSpec] = None,
+        small_kernel_efficiency: float = 0.45,
+        replanner: Optional[Callable[[Optional[Dict[str, int]]],
+                                     PartitionPlan]] = None,
+        replan_interval_s: float = 0.0,
     ):
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
@@ -193,6 +201,30 @@ class FleetSimulator:
                 "pass per-replica specs OR a shared cost_model, not both")
         if specs is not None and not specs:
             raise ValueError("specs must be non-empty when given")
+        if partition is not None:
+            # co-located slice pumps share one chip's timeline: per-chip
+            # state the shard merge / autoscaler / hetero specs cannot
+            # reason about — same rules SystemSpec enforces at load time
+            if workers > 1:
+                raise ValueError(
+                    "partition requires workers=1 (co-located slice pumps "
+                    "share per-chip state the shard merge does not replay)")
+            if autoscaler is not None:
+                raise ValueError(
+                    "partition cannot combine with an autoscaler: the plan "
+                    "carves a fixed replica set; drop one")
+            if specs is not None:
+                raise ValueError(
+                    "partition cannot combine with per-replica specs: "
+                    "slices are carved from ONE base hardware "
+                    "(partition_hardware)")
+            if cost_model is not None:
+                raise ValueError(
+                    "partition builds each slice's own sliced-roofline "
+                    "model; drop the shared cost_model")
+        if replan_interval_s < 0.0:
+            raise ValueError(
+                f"replan_interval_s must be >= 0, got {replan_interval_s}")
         self.workers = int(workers)
         self.router = make_router(router) if isinstance(router, str) else router
         self.schedule = schedule
@@ -207,6 +239,18 @@ class FleetSimulator:
         # optional FlightRecorder (repro.obs); set before the initial
         # spawn loop so every replica — initial or autoscaled — attaches
         self.recorder = recorder
+        self.partition = partition
+        self.partition_hardware = partition_hardware or TPU_V5E
+        self.small_kernel_efficiency = float(small_kernel_efficiency)
+        self.replanner = replanner
+        self.replan_interval_s = float(replan_interval_s)
+        self.partition_events: List[Dict] = []
+        # group index -> that group's slice pumps, one per physical chip
+        self._group_pumps: List[List[ReplicaPump]] = (
+            [[] for _ in partition.groups] if partition is not None else [])
+        # replica_id -> the mutable RooflineCostModel a slice prices
+        # through (re-planning swaps its .spec in place)
+        self._partition_bases: Dict[int, RooflineCostModel] = {}
 
         self.pumps: List[ReplicaPump] = []       # every replica ever live
         self.active: List[ReplicaPump] = []      # currently routable
@@ -216,11 +260,31 @@ class FleetSimulator:
         self._fleet_acc = MetricsAccumulator()
         self._replica_accs: List[MetricsAccumulator] = []
         self._next_id = 0
-        for _ in range(replicas):
+        groups = len(partition.groups) if partition is not None else 1
+        for _ in range(replicas * groups):
             self._spawn(self.start_s)
+        if partition is not None:
+            for g in partition.groups:
+                self.partition_events.append({
+                    "t_s": self.start_s, "action": "assign",
+                    "group": g.name, "share": g.share,
+                    "tenants": list(g.tenants), "window_s": g.window_s})
 
     # -------------------------------------------------------- replica pool
+    def _slice_spec(self, group) -> HardwareSpec:
+        hw = self.partition_hardware
+        return hw.sliced(group.share,
+                         name=f"{hw.name}@{group.name}:{group.share:g}")
+
     def _base_model(self, replica_id: int) -> Callable[[Sequence], float]:
+        if self.partition is not None:
+            group = self.partition.groups[
+                replica_id % len(self.partition.groups)]
+            base = RooflineCostModel(
+                spec=self._slice_spec(group), strategy=self.strategy,
+                small_kernel_efficiency=self.small_kernel_efficiency)
+            self._partition_bases[replica_id] = base
+            return base
         if self.specs is not None:
             return RooflineCostModel(
                 spec=self.specs[replica_id % len(self.specs)],
@@ -240,7 +304,16 @@ class FleetSimulator:
         if self.compile_s > 0.0:
             model = ColdStartCostModel(base, compile_s=self.compile_s,
                                        clock=clock)
-        pump = ReplicaPump(schedule=self.schedule, cost_model=model,
+        schedule = self.schedule
+        if self.partition is not None:
+            # the planner co-optimized a batching window per slice: a
+            # slice with deadline slack batches wider, a tight one leaner
+            group = self.partition.groups[i % len(self.partition.groups)]
+            if group.window_s is not None:
+                schedule = dataclasses.replace(
+                    schedule or ScheduleConfig(),
+                    batching_window_s=group.window_s)
+        pump = ReplicaPump(schedule=schedule, cost_model=model,
                            clock=clock, replica_id=i)
         pump.track_inflight = True  # routers read occupancy in fleet time
         spec = getattr(base, "spec", None)
@@ -254,6 +327,8 @@ class FleetSimulator:
         if self.recorder is not None:
             # after calibration wiring: the recorder tap composes over it
             pump.attach_recorder(self.recorder.shard(i))
+        if self.partition is not None:
+            self._group_pumps[i % len(self.partition.groups)].append(pump)
         acc = MetricsAccumulator()
         pump.accs = [self._fleet_acc, acc]
         self.pumps.append(pump)
@@ -284,6 +359,42 @@ class FleetSimulator:
                 t_s=now, action="down", replica_id=p.replica_id,
                 active=len(self.active), signal=signal))
 
+    def _apply_replan(self, now: float) -> None:
+        """Re-run the planner from each slice's OBSERVED mean merged
+        batch size and swap slice sizes in place.
+
+        Only SHARES move: each affected pump's base ``RooflineCostModel``
+        gets the new sliced spec (pricing, feasibility admission and
+        routing all read it from there), while batching windows stay at
+        their planned values — the pump's calendar queue is built around
+        a fixed window. Group membership never changes (the planner is
+        deterministic in the mix), so routing stays stable too.
+        """
+        plan = self.partition
+        r_obs: Dict[str, int] = {}
+        for gi, g in enumerate(plan.groups):
+            stats = [p.scheduler.stats for p in self._group_pumps[gi]]
+            dispatches = sum(s.dispatches for s in stats)
+            if dispatches > 0:
+                completed = sum(s.problems_completed for s in stats)
+                r_obs[g.name] = max(1, round(completed / dispatches))
+        new_plan = self.replanner(r_obs or None)
+        applied = []
+        for gi, (old, new) in enumerate(zip(plan.groups, new_plan.groups)):
+            applied.append(dataclasses.replace(new, window_s=old.window_s))
+            if abs(new.share - old.share) <= 1e-12:
+                continue
+            spec = self._slice_spec(new)
+            for p in self._group_pumps[gi]:
+                self._partition_bases[p.replica_id].spec = spec
+                p.spec_name = spec.name
+                p.speed_factor = spec.peak_flops / TPU_V5E.peak_flops
+            self.partition_events.append({
+                "t_s": now, "action": "replan", "group": new.name,
+                "share": new.share, "prev_share": old.share,
+                "observed_r": r_obs.get(new.name, 0)})
+        self.partition = PartitionPlan(groups=tuple(applied))
+
     # ------------------------------------------------------------ event loop
     def _drain_until(self, t_limit: float) -> None:
         """Merged global timeline (``repro.core.pump.drain_merged``) over
@@ -306,21 +417,36 @@ class FleetSimulator:
         rec = self.recorder
         t_start = self.start_s
         next_tick = t_start + scaler.interval_s if scaler is not None else None
+        next_replan = None
+        if (self.partition is not None and self.replanner is not None
+                and self.replan_interval_s > 0.0):
+            next_replan = t_start + self.replan_interval_s
 
         for t_s, spec, cost in _arrival_stream(trace):
             while next_tick is not None and t_s >= next_tick:
                 self._drain_until(next_tick)
                 self._apply_autoscale(next_tick)
                 next_tick += scaler.interval_s
+            while next_replan is not None and t_s >= next_replan:
+                self._drain_until(next_replan)
+                self._apply_replan(next_replan)
+                next_replan += self.replan_interval_s
             self._drain_until(t_s)
-            idx = router.route(spec, self.active, t_s)
-            pump = self.active[idx]
+            # a partitioned fleet routes WITHIN the tenant's slice group:
+            # the candidates are that slice's pumps across chips, so the
+            # router load-balances chips while the plan owns placement
+            candidates = self.active
+            if self.partition is not None:
+                candidates = self._group_pumps[
+                    self.partition.group_of(spec.tenant_id)]
+            idx = router.route(spec, candidates, t_s)
+            pump = candidates[idx]
             if rec is not None:
                 # recompute the (idempotent) price vector the router just
                 # read — recorded before submit so the decision context is
                 # the pre-admission state it was actually made against
                 rids, prices = route_price_vector(
-                    router, spec, self.active, t_s)
+                    router, spec, candidates, t_s)
                 rec.record_route(t_s, spec.tenant_id, pump.replica_id,
                                  rids, prices)
             w = SimWorkload(spec, cost)
@@ -345,6 +471,15 @@ class FleetSimulator:
         if rec is not None:
             rec.router_name = self.router.name
             rec.record_scale_events(self.scale_events)
+            if self.partition is not None:
+                rec.record_partition_events(self.partition_events)
+        partition_doc = None
+        if self.partition is not None:
+            partition_doc = {
+                "plan": self.partition.to_dict(),
+                "events": [dict(e) for e in self.partition_events],
+                "groups_per_replica": len(self.partition.groups),
+            }
         merged = self._freeze_merged(self._fleet_acc, horizon)
         per_replica = [p.freeze(acc, sim_duration_s=horizon)
                        for p, acc in zip(pumps, self._replica_accs)]
@@ -359,6 +494,7 @@ class FleetSimulator:
             scale_events=self.scale_events,
             replica_specs=[p.spec_name for p in pumps],
             final_active=len(self.active),
+            partition=partition_doc,
         )
 
     # ------------------------------------------------------------- internals

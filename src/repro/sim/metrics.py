@@ -278,7 +278,8 @@ class FleetMetrics:
                  cold_times: np.ndarray, cold_flags: np.ndarray,
                  scale_events: Optional[Sequence] = None,
                  replica_specs: Optional[Sequence[Optional[str]]] = None,
-                 final_active: Optional[int] = None):
+                 final_active: Optional[int] = None,
+                 partition: Optional[Dict] = None):
         self.merged = merged
         self.per_replica = per_replica
         self.routed_counts = np.asarray(routed_counts, np.int64)
@@ -294,6 +295,11 @@ class FleetMetrics:
             else [None] * len(per_replica))
         self.final_active = (len(per_replica) if final_active is None
                              else int(final_active))
+        # fractional-share section (repro.partition): the final plan plus
+        # the assign/replan event timeline. None on unpartitioned fleets,
+        # and then absent from to_dict() — pre-partition metrics JSON
+        # stays byte-identical.
+        self.partition: Optional[Dict] = partition
 
     @property
     def replicas(self) -> int:
@@ -455,6 +461,8 @@ class FleetMetrics:
         doc["routed_counts"] = [int(c) for c in self.routed_counts]
         doc["router"] = self.router
         doc["scale_events"] = self.scale_events
+        if self.partition is not None:
+            doc["partition"] = self.partition
         return doc
 
     def to_json(self) -> str:

@@ -1,0 +1,86 @@
+"""Hypothesis property tests for the fractional-share planner.
+
+Three properties the knee machinery stands on:
+
+* throughput is non-decreasing in the spatial share on ANY workload the
+  roofline pricer can see (roofs scale with the share, overheads do
+  not — more chip never slows a slice down);
+* the knee is well-defined on monotone curves: it reaches the requested
+  fraction of the best throughput, and raising ``knee_fraction`` can
+  only move the knee up the curve;
+* the planner is a pure function — byte-identical ``to_json`` across
+  repeated calls for any (grid, knee_fraction, merge_size) knobs.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.api import WorkloadSpec, build_mix
+from repro.launch.roofline import TPU_V5E
+from repro.partition import (
+    DEFAULT_SHARE_GRID,
+    PlannerConfig,
+    knee_share,
+    plan_partitions,
+    share_pricer,
+    throughput_curve,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+MIX = build_mix(WorkloadSpec(mix="sgemm", tenants=6))
+PRICE = share_pricer(TPU_V5E)
+
+
+@given(
+    widx=st.integers(min_value=0, max_value=len(MIX) - 1),
+    r=st.integers(min_value=1, max_value=256),
+)
+def test_throughput_non_decreasing_in_share(widx, r):
+    curve = throughput_curve(MIX[widx], r, PRICE, DEFAULT_SHARE_GRID)
+    thrs = [thr for _, thr in curve]
+    assert all(b >= a * (1.0 - 1e-12) for a, b in zip(thrs, thrs[1:])), \
+        f"throughput fell as share grew: {curve}"
+    assert all(thr > 0.0 for thr in thrs)
+
+
+@given(
+    widx=st.integers(min_value=0, max_value=len(MIX) - 1),
+    r=st.integers(min_value=1, max_value=256),
+    frac_lo=st.floats(min_value=0.05, max_value=0.95),
+    frac_hi=st.floats(min_value=0.05, max_value=0.95),
+)
+def test_knee_well_defined_and_monotone_in_fraction(
+        widx, r, frac_lo, frac_hi):
+    curve = throughput_curve(MIX[widx], r, PRICE, DEFAULT_SHARE_GRID)
+    lo, hi = sorted((frac_lo, frac_hi))
+    k_lo, k_hi = knee_share(curve, lo), knee_share(curve, hi)
+    # well-defined: the knee is a grid point whose throughput reaches
+    # the requested fraction of the curve's best
+    best = max(thr for _, thr in curve)
+    by_share = dict(curve)
+    for frac, knee in ((lo, k_lo), (hi, k_hi)):
+        assert knee in by_share
+        assert by_share[knee] + 1e-12 >= frac * best
+    # a stricter fraction can only move the knee up the curve
+    assert k_hi >= k_lo
+
+
+@given(
+    knee_fraction=st.floats(min_value=0.1, max_value=1.0),
+    min_share=st.sampled_from(DEFAULT_SHARE_GRID[:4]),
+    merge_size=st.integers(min_value=1, max_value=128),
+)
+def test_planner_byte_identical_and_subscribed(
+        knee_fraction, min_share, merge_size):
+    cfg = PlannerConfig(knee_fraction=knee_fraction, min_share=min_share,
+                        merge_size=merge_size)
+    a = plan_partitions(MIX, TPU_V5E, cfg)
+    b = plan_partitions(MIX, TPU_V5E, cfg)
+    assert a.to_json() == b.to_json()
+    assert a.total_share <= 1.0 + 1e-9
+    assert sorted(t for g in a.groups for t in g.tenants) == \
+        sorted(s.tenant_id for s in MIX)
